@@ -1,0 +1,51 @@
+"""Kernel micro-bench: Pallas(interpret) correctness-path vs jnp reference
+wall time on CPU, plus the contraction sizes the TPU kernels target.
+
+(Wall times here are CPU-oracle numbers; the TPU story is the dry-run
+roofline.  This bench exists to pin the kernels into the perf harness and
+catch pathological regressions in the jnp paths used by apps.)"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def _time(f, n=5):
+    jax.block_until_ready(f())
+    t0 = time.time()
+    for _ in range(n):
+        jax.block_until_ready(f())
+    return 1e6 * (time.time() - t0) / n
+
+
+def run(verbose=True):
+    rows = []
+    key = jax.random.PRNGKey(0)
+    # gram: the SAP dependency hot spot at benchmark scale
+    for (n, p) in ((512, 256), (2048, 512)):
+        x = jax.random.normal(key, (n, p))
+        f = jax.jit(lambda x: ops.gram(x, impl="xla"))
+        us = _time(lambda: f(x))
+        rows.append({"bench": "kernel", "kernel": "gram",
+                     "shape": f"{n}x{p}", "us_per_call": us,
+                     "gflops": 2 * n * p * p / us / 1e3})
+        if verbose:
+            print(f"gram {n}x{p}: {us:8.0f}us "
+                  f"({2*n*p*p/us/1e3:6.1f} GFLOP/s)", flush=True)
+    # attention: chunk sizes of the flash kernel
+    q = jax.random.normal(key, (1, 8, 1024, 64)) * 0.3
+    f = jax.jit(lambda q: ops.flash_attention(q, q, q, impl="xla"))
+    us = _time(lambda: f(q))
+    rows.append({"bench": "kernel", "kernel": "attention_ref",
+                 "shape": "1x8x1024x64", "us_per_call": us})
+    if verbose:
+        print(f"attention 1x8x1024x64: {us:8.0f}us", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

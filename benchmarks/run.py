@@ -1,0 +1,87 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark driver: runs every table/figure benchmark and emits CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--csv out.csv]
+
+Benchmarks (→ paper analogue):
+    lasso_convergence   → Fig. 1 & 4 (SAP vs static vs Shotgun)
+    mf_loadbalance      → Fig. 5 (load balancing, uniform vs power-law)
+    scheduler_throughput→ Sec. 3 properties (scheduler not a bottleneck)
+    moe_balance         → beyond-paper (SAP step 3 in a modern MoE)
+    serving_dispatch    → beyond-paper (SAP step 3 for inference replicas)
+    kernel_bench        → kernels perf pinning
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import io
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller problem sizes")
+    ap.add_argument("--csv", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args()
+
+    from benchmarks import (kernel_bench, lasso_convergence, mf_loadbalance,
+                            moe_balance, sap_ablations, scheduler_throughput,
+                            serving_dispatch)
+
+    quick = args.quick
+    benches = {
+        "lasso_convergence": lambda: lasso_convergence.run(
+            n_features=800 if quick else 2000,
+            rounds=120 if quick else 250,
+            workers=(16, 64) if quick else (16, 64, 256)),
+        "mf_loadbalance": lambda: mf_loadbalance.run(
+            n_rows=200 if quick else 400, n_cols=150 if quick else 300,
+            epochs=2 if quick else 4),
+        "scheduler_throughput": lambda: scheduler_throughput.run(
+            n_features=2000 if quick else 4000),
+        "moe_balance": lambda: moe_balance.run(steps=10 if quick else 30),
+        "serving_dispatch": lambda: serving_dispatch.run(),
+        "kernel_bench": lambda: kernel_bench.run(),
+        "sap_ablations": lambda: sap_ablations.run(),
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        benches = {k: v for k, v in benches.items() if k in keep}
+
+    all_rows = []
+    for name, fn in benches.items():
+        print(f"=== {name} ===", flush=True)
+        t0 = time.time()
+        rows = fn()
+        print(f"    ({time.time()-t0:.1f}s)", flush=True)
+        all_rows.extend(rows)
+
+    # CSV: name,us_per_call,derived — stable contract for tooling
+    buf = io.StringIO()
+    w = csv.writer(buf)
+    w.writerow(["name", "us_per_call", "derived"])
+    for r in all_rows:
+        name = r.get("bench", "?")
+        for k in ("scheduler", "scheme", "mode", "metric", "kernel", "data",
+                  "param", "value", "P", "replicas", "shape"):
+            if k in r:
+                name += f"/{r[k]}"
+        us = r.get("us_per_call", r.get("us_per_round",
+                                        r.get("us_per_epoch",
+                                              r.get("us_per_step", ""))))
+        derived = {k: v for k, v in r.items()
+                   if k not in ("bench", "us_per_call", "us_per_round",
+                                "us_per_epoch", "us_per_step")}
+        w.writerow([name, us, derived])
+    print(buf.getvalue())
+    if args.csv:
+        with open(args.csv, "w") as f:
+            f.write(buf.getvalue())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""SAP parameter ablations (paper Sec. 2/4 knobs, beyond the headline
+figures): the dependency threshold ρ and the exploration constant η.
+
+ρ controls the correctness/parallelism trade: small ρ dispatches fewer,
+cleaner blocks (less interference, fewer parallel updates); ρ→1 recovers
+Shotgun.  η controls exploration mass in p(j); the paper's η=1e-6 is
+scale-dependent (EXPERIMENTS.md §Paper-validation sensitivity note).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.apps import lasso as L
+from repro.core.sap import SAPConfig
+
+
+def _problem(seed=1, n=150, j=1200):
+    prob, _ = L.make_synthetic(jax.random.PRNGKey(seed), n, j, j // 40,
+                               n_groups=j // 20, group_corr=0.9)
+    return L.with_lambda(prob, 0.1 * float(L.lam_max(prob)))
+
+
+def rho_sweep(rounds=150, P=64, rhos=(0.05, 0.1, 0.2, 0.4, 0.7, 1.0),
+              verbose=True):
+    prob = _problem()
+    rows = []
+    for rho in rhos:
+        cfg = SAPConfig(n_workers=P, n_candidates=4 * P, rho=rho, eta=0.1)
+        res = L.run_lasso(prob, "sap", cfg, rounds)
+        o = np.asarray(res.objectives)
+        # dispatched fraction: how much of the P-block survives ρ-filtering
+        frac = float(res.updates[-1]) / (rounds * P)
+        rows.append({"bench": "sap_ablation", "param": "rho", "value": rho,
+                     "obj_final": float(o[-1]), "obj@50": float(o[50]),
+                     "dispatch_frac": frac})
+        if verbose:
+            print(f"rho={rho:4.2f} f@50={o[50]:8.2f} final={o[-1]:8.2f} "
+                  f"dispatched={frac:4.2f} of P", flush=True)
+    return rows
+
+
+def eta_sweep(rounds=300, P=64, etas=(1e-6, 1e-3, 1e-2, 1e-1, 1.0),
+              verbose=True):
+    prob = _problem()
+    rows = []
+    for eta in etas:
+        cfg = SAPConfig(n_workers=P, n_candidates=4 * P, rho=0.2, eta=eta)
+        res = L.run_lasso(prob, "sap", cfg, rounds)
+        o = np.asarray(res.objectives)
+        rows.append({"bench": "sap_ablation", "param": "eta", "value": eta,
+                     "obj@100": float(o[100]), "obj_final": float(o[-1])})
+        if verbose:
+            print(f"eta={eta:7.0e} f@100={o[100]:8.2f} final={o[-1]:8.2f}",
+                  flush=True)
+    return rows
+
+
+def run(verbose=True):
+    return rho_sweep(verbose=verbose) + eta_sweep(verbose=verbose)
+
+
+if __name__ == "__main__":
+    run()

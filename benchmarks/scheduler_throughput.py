@@ -1,0 +1,92 @@
+"""Paper Sec. 3 'Properties of STRADS': the scheduler must not be the
+bottleneck.
+
+Measures the cost of one SAP *selection* (steps 1–2: importance sampling +
+candidate gram + greedy ρ-filter) against the cost of the *worker update*
+it schedules (the CD block update), across problem sizes; and the
+round-robin S-shard scaling (each shard holds J/S state → selection cost
+per shard must not grow with S)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.apps import lasso as L
+from repro.core.importance import init_importance, sample_candidates
+from repro.core.dependency import select_block
+from repro.core.sap import SAPConfig
+from repro.core.scheduler import strads_init, strads_select
+
+
+def _time(f, n=20):
+    f()                                    # compile
+    t0 = time.time()
+    for _ in range(n):
+        f()
+    return 1e6 * (time.time() - t0) / n
+
+
+def run(n_samples=300, n_features=4000, P=64, seed=0, verbose=True):
+    prob, _ = L.make_synthetic(jax.random.PRNGKey(seed), n_samples,
+                               n_features, 50)
+    prob = L.with_lambda(prob, 0.05)
+    cfg = SAPConfig(n_workers=P, n_candidates=4 * P, rho=0.2, eta=0.05)
+    imp = init_importance(n_features, eta=0.05)
+    st = L.init_state(prob)
+    key = jax.random.PRNGKey(0)
+
+    @jax.jit
+    def select_only(key, imp):
+        cand = sample_candidates(key, imp, cfg.n_candidates)
+        coupling = L.lasso_coupling(prob, cand)
+        return select_block(cand, coupling, imp.weights[cand], cfg.rho,
+                            cfg.n_workers)
+
+    @jax.jit
+    def update_only(idx, mask, st):
+        return L.cd_block_update(prob, st, idx, mask)
+
+    idx, mask = select_only(key, imp)
+    jax.block_until_ready(idx)
+    t_select = _time(lambda: jax.block_until_ready(select_only(key, imp)))
+    t_update = _time(lambda: jax.block_until_ready(
+        update_only(idx, mask, st)))
+
+    rows = [{"bench": "scheduler_throughput", "metric": "select_us",
+             "P": P, "us_per_call": t_select},
+            {"bench": "scheduler_throughput", "metric": "update_us",
+             "P": P, "us_per_call": t_update},
+            {"bench": "scheduler_throughput", "metric": "select_over_update",
+             "P": P, "ratio": t_select / t_update}]
+    if verbose:
+        print(f"selection {t_select:8.0f}us  worker-update {t_update:8.0f}us"
+              f"  ratio {t_select/t_update:.2f}", flush=True)
+
+    # S-shard scaling: per-shard selection on J/S variables
+    for S in (1, 4, 16):
+        js = n_features // S
+        cfg_s = SAPConfig(n_workers=min(P, js // 2),
+                          n_candidates=min(4 * P, js // 2 + 1),
+                          rho=cfg.rho, eta=cfg.eta)
+        st_s = strads_init(n_features, S, cfg_s)
+
+        @jax.jit
+        def shard_select(key, st_s, cfg_s=cfg_s):
+            return strads_select(key, st_s, 0, None,
+                                 lambda a, c: L.lasso_coupling(prob, c),
+                                 cfg_s)
+
+        i, m = shard_select(key, st_s)
+        jax.block_until_ready(i)
+        t = _time(lambda: jax.block_until_ready(shard_select(key, st_s)))
+        rows.append({"bench": "scheduler_throughput",
+                     "metric": f"shard_select_S{S}", "us_per_call": t})
+        if verbose:
+            print(f"S={S:3d} per-shard selection {t:8.0f}us", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

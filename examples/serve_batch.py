@@ -1,0 +1,60 @@
+"""End-to-end serving driver: batched requests through the continuous-
+batching engine with SAP-balanced replica dispatch (deliverable b).
+
+    PYTHONPATH=src python examples/serve_batch.py --arch gemma-2b
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving import Request, ServingEngine, simulate_makespan
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=96)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    params = init_params(jax.random.PRNGKey(args.seed), cfg)
+    rng = np.random.default_rng(args.seed)
+
+    lens = np.minimum((rng.pareto(1.5, args.requests) * 10 + 4).astype(int),
+                      args.cache_len // 2)
+    reqs = []
+    for i, l in enumerate(lens):
+        shape = ((cfg.n_codebooks, int(l)) if cfg.n_codebooks > 1
+                 else (int(l),))
+        reqs.append(Request(
+            uid=i, prompt=rng.integers(0, cfg.vocab_size, shape)
+            .astype(np.int32),
+            max_new_tokens=int(rng.integers(4, 20))))
+
+    # SAP step-3 dispatch story across 4 replicas
+    ms_s, _ = simulate_makespan(reqs, 4, "strads")
+    ms_n, _ = simulate_makespan(reqs, 4, "naive")
+    print(f"4-replica dispatch: LPT makespan {ms_s:.0f} vs naive {ms_n:.0f} "
+          f"({ms_n/ms_s:.2f}x)")
+
+    eng = ServingEngine(cfg, params, max_batch=args.max_batch,
+                        cache_len=args.cache_len)
+    t0 = time.time()
+    out = eng.run(reqs)
+    dt = time.time() - t0
+    toks = sum(len(v) for v in out.values())
+    print(f"served {len(out)}/{len(reqs)} requests, {toks} tokens in "
+          f"{eng.steps} steps, {dt:.1f}s ({toks/dt:.1f} tok/s, "
+          f"continuous batching over {args.max_batch} slots)")
+    assert len(out) == len(reqs)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Pre-flight: trace + lower (NO compile) every (arch × shape) on a mesh.
+
+Catches tracing/sharding-spec bugs at ~seconds per combo instead of the
+minutes a full XLA compile costs.  Not a deliverable — dryrun.py is.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    args = ap.parse_args()
+
+    import jax
+    from repro.configs import ARCH_IDS, SHAPE_IDS, get_config, get_shape
+    from repro.distributed.context import use_mesh
+    from repro.distributed.sharding import shardings_for
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import step_and_specs
+
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multipod"))
+    fails = 0
+    for arch in ARCH_IDS:
+        for shape_id in SHAPE_IDS:
+            t0 = time.time()
+            try:
+                cfg = get_config(arch)
+                shape = get_shape(shape_id)
+                step, a, ins, outs = step_and_specs(cfg, shape, mesh)
+                in_sh = shardings_for(ins, mesh)
+                out_sh = (shardings_for(outs, mesh)
+                          if outs is not None else None)
+                with mesh, use_mesh(mesh):
+                    jax.jit(step, in_shardings=in_sh,
+                            out_shardings=out_sh).lower(*a)
+                print(f"OK   {arch:20s} {shape_id:12s} "
+                      f"{time.time()-t0:6.1f}s", flush=True)
+            except Exception as e:  # noqa: BLE001
+                fails += 1
+                print(f"FAIL {arch:20s} {shape_id:12s} "
+                      f"{type(e).__name__}: {str(e)[:300]}", flush=True)
+                tb = traceback.format_exc().splitlines()
+                print("     " + "\n     ".join(tb[-6:]), flush=True)
+    print(f"done, {fails} failures")
+    return 1 if fails else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,47 @@
+"""Render the §Roofline markdown table from dry-run JSONL artifacts."""
+import argparse
+import json
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}µs"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("jsonl", nargs="+")
+    ap.add_argument("--fails-only", action="store_true")
+    args = ap.parse_args()
+
+    recs = []
+    for path in args.jsonl:
+        recs += [json.loads(l) for l in open(path)]
+
+    print("| arch | shape | mesh | compute | memory | collective |"
+          " bound | useful | bytes/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAIL: "
+                  f"{r.get('error','')[:60]} | | | | | |")
+            continue
+        if args.fails_only:
+            continue
+        ro = r["roofline"]
+        mem = r.get("memory_analysis", {})
+        bpd = (mem.get("argument_size_in_bytes", 0)
+               + mem.get("temp_size_in_bytes", 0))
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+              f"| {fmt_s(ro['compute_s'])} | {fmt_s(ro['memory_s'])} "
+              f"| {fmt_s(ro['collective_s'])} | {ro['bottleneck']} "
+              f"| {ro['useful_ratio']:.2f} | {bpd/1e9:.1f}GB |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Paper case-study applications: parallel Lasso and matrix factorization."""
+from repro.apps import lasso, matrix_factorization
+
+__all__ = ["lasso", "matrix_factorization"]

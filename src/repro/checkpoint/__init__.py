@@ -1,0 +1,5 @@
+"""Checkpointing: flat path-keyed .npz shards + metadata."""
+from repro.checkpoint.npz import (latest_step, restore_checkpoint,
+                                  save_checkpoint)
+
+__all__ = ["latest_step", "restore_checkpoint", "save_checkpoint"]

@@ -1,0 +1,46 @@
+"""Architecture registry: every assigned architecture as a selectable config.
+
+``get_config(arch_id)`` accepts the assignment's public ids
+(e.g. ``mamba2-1.3b``) and returns the exact published hyperparameters;
+``CONFIG.reduced()`` produces the CPU smoke-test variant.
+"""
+from repro.configs.base import (ArchConfig, MLAConfig, MoEConfig, SHAPES,
+                                ShapeConfig, SSMConfig, DECODE_32K, LONG_500K,
+                                PREFILL_32K, TRAIN_4K)
+
+_MODULES = {
+    "mamba2-1.3b": "mamba2_1p3b",
+    "llama3.2-3b": "llama3p2_3b",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "qwen3-32b": "qwen3_32b",
+    "gemma-2b": "gemma_2b",
+    "mistral-large-123b": "mistral_large_123b",
+    "zamba2-2.7b": "zamba2_2p7b",
+    "musicgen-medium": "musicgen_medium",
+}
+
+ARCH_IDS = tuple(_MODULES)
+SHAPE_IDS = tuple(SHAPES)
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; choose from {ARCH_IDS}")
+    import importlib
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+def get_shape(shape_id: str) -> ShapeConfig:
+    if shape_id not in SHAPES:
+        raise KeyError(f"unknown shape {shape_id!r}; choose from {SHAPE_IDS}")
+    return SHAPES[shape_id]
+
+
+__all__ = [
+    "ARCH_IDS", "SHAPE_IDS", "ArchConfig", "MLAConfig", "MoEConfig",
+    "SSMConfig", "ShapeConfig", "SHAPES", "TRAIN_4K", "PREFILL_32K",
+    "DECODE_32K", "LONG_500K", "get_config", "get_shape",
+]

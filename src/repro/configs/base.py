@@ -1,0 +1,268 @@
+"""Architecture and input-shape configuration dataclasses.
+
+Every assigned architecture gets one module in ``repro.configs`` exporting a
+``CONFIG: ArchConfig`` with the exact published hyperparameters (source cited
+in the module docstring).  Reduced variants for CPU smoke tests are produced
+with :func:`ArchConfig.reduced`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts sub-config."""
+
+    n_experts: int
+    experts_per_token: int
+    d_ff_expert: int
+    n_shared_experts: int = 0          # DeepSeek-style shared expert(s)
+    capacity_factor: float = 1.25
+    router_balance: str = "aux_loss"   # "aux_loss" | "strads_bias" | "none"
+    aux_loss_weight: float = 0.01
+    bias_update_rate: float = 1e-3     # STRADS dynamic-balance bias step
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek multi-head latent attention sub-config."""
+
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 / SSD sub-config."""
+
+    state_dim: int = 128               # N (ssm_state)
+    n_groups: int = 1                  # B/C groups
+    expand: int = 2                    # d_inner = expand * d_model
+    head_dim: int = 64                 # P per SSD head
+    conv_dim: int = 4
+    chunk_size: int = 256              # SSD chunk length
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    """A single architecture from the assigned pool."""
+
+    name: str
+    family: str                        # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                  # 0 -> d_model // n_heads
+    source: str = ""                   # citation
+
+    # Attention details
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    mrope: bool = False                # Qwen2-VL multimodal RoPE (3 sections)
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)
+    attn_logit_softcap: float = 0.0
+    sliding_window: int = 0            # training/prefill window (0 = full)
+    # Window used *only* for the long_500k decode variant of dense archs:
+    long_context_window: int = 8192
+
+    # FFN
+    activation: str = "silu"           # silu (SwiGLU) | gelu (GeGLU)
+
+    # Embeddings / head
+    tie_embeddings: bool = False
+    embed_scale: bool = False          # gemma: scale embeddings by sqrt(d)
+
+    # Norm
+    norm_eps: float = 1e-5
+    post_attn_norm: bool = False       # gemma2-style extra norms (unused here)
+
+    # Sub-configs (None when not applicable)
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+
+    # MoE models may keep the first k layers dense (DeepSeek-V3: 3)
+    first_k_dense: int = 0
+    # MTP (DeepSeek multi-token prediction) depth; 0 disables
+    mtp_depth: int = 0
+
+    # Hybrid (zamba2): one *shared* attention block applied every
+    # ``attn_every`` SSM layers.  n_layers counts SSM layers.
+    attn_every: int = 0
+
+    # Modality frontend stub: none | vision | audio
+    frontend: str = "none"
+    # Fraction of the sequence that is frontend (vision/audio) embeddings
+    frontend_frac: float = 0.25
+    # MusicGen: number of EnCodec codebooks (summed embeds in, K heads out)
+    n_codebooks: int = 1
+
+    # Which layer mixer dominates ("attn" | "ssm")
+    @property
+    def mixer(self) -> str:
+        return "ssm" if self.family in ("ssm", "hybrid") else "attn"
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to a multiple of 256 so the vocab axis always
+        divides the model mesh axis (e.g. mamba2's 50280 → 50432);
+        padded logit columns are masked to −inf in the head."""
+        return -(-self.vocab_size // 256) * 256
+
+    @property
+    def subquadratic(self) -> bool:
+        """Can this arch natively decode at 500k context?"""
+        return self.family in ("ssm", "hybrid")
+
+    # ------------------------------------------------------------------
+    # Parameter counting (analytic, for roofline MODEL_FLOPS and sanity)
+    # ------------------------------------------------------------------
+    def param_count(self) -> int:
+        d = self.d_model
+        hd = self.resolved_head_dim
+        total = self.vocab_size * d * self.n_codebooks           # embed
+        if not self.tie_embeddings:
+            total += d * self.vocab_size * self.n_codebooks      # head(s)
+        total += d                                               # final norm
+
+        def attn_params() -> int:
+            if self.mla is not None:
+                m = self.mla
+                qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+                p = d * m.q_lora_rank + m.q_lora_rank * self.n_heads * qk_head
+                p += d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                p += m.kv_lora_rank * self.n_heads * (m.qk_nope_head_dim + m.v_head_dim)
+                p += self.n_heads * m.v_head_dim * d
+                return p
+            q = d * self.n_heads * hd
+            kv = 2 * d * self.n_kv_heads * hd
+            o = self.n_heads * hd * d
+            return q + kv + o
+
+        def mlp_params(ff: int) -> int:
+            return 3 * d * ff                                    # gate,up,down
+
+        def ssm_params() -> int:
+            s = self.ssm
+            assert s is not None
+            d_in = s.expand * d
+            n_heads_ssm = d_in // s.head_dim
+            p = d * (2 * d_in + 2 * s.n_groups * s.state_dim + n_heads_ssm)
+            p += s.conv_dim * (d_in + 2 * s.n_groups * s.state_dim)
+            p += 2 * n_heads_ssm                                 # A_log, D
+            p += d_in                                            # norm
+            p += d_in * d                                        # out proj
+            return p
+
+        for layer in range(self.n_layers):
+            total += 2 * d                                       # norms
+            if self.family in ("ssm", "hybrid"):
+                total += ssm_params()
+                if self.family == "ssm":
+                    continue
+                continue  # hybrid mlp handled in shared block below
+            total += attn_params()
+            if self.moe is not None and layer >= self.first_k_dense:
+                m = self.moe
+                total += d * m.n_experts                         # router
+                total += m.n_experts * 3 * d * m.d_ff_expert
+                total += m.n_shared_experts * 3 * d * m.d_ff_expert
+            else:
+                total += mlp_params(self.d_ff)
+        if self.family == "hybrid" and self.attn_every:
+            # one shared attention+mlp block (zamba2 weight sharing)
+            total += attn_params() + mlp_params(self.d_ff) + 2 * d
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only routed-active experts)."""
+        if self.moe is None:
+            return self.param_count()
+        m = self.moe
+        dense_like = dataclasses.replace(self, moe=None)
+        base = dense_like.param_count()
+        # dense_like counted d_ff MLPs in every layer; replace the MoE layers'
+        # MLP cost with (top-k + shared) experts + router.
+        moe_layers = self.n_layers - self.first_k_dense
+        base -= moe_layers * 3 * self.d_model * self.d_ff
+        per_layer = (m.experts_per_token + m.n_shared_experts) * 3 * self.d_model * m.d_ff_expert
+        per_layer += self.d_model * m.n_experts
+        return base + moe_layers * per_layer
+
+    # ------------------------------------------------------------------
+    def reduced(self) -> "ArchConfig":
+        """CPU-sized variant of the same family for smoke tests.
+
+        <= 2 layers, d_model <= 512, <= 4 experts, tiny vocab.
+        """
+        kw = dict(
+            n_layers=2,
+            d_model=min(self.d_model, 128),
+            n_heads=min(self.n_heads, 4),
+            n_kv_heads=min(self.n_kv_heads, 2),
+            d_ff=min(self.d_ff, 256) or 0,
+            vocab_size=min(self.vocab_size, 512),
+            head_dim=32 if self.head_dim else 0,
+            sliding_window=min(self.sliding_window, 64) if self.sliding_window else 0,
+            long_context_window=64,
+            first_k_dense=min(self.first_k_dense, 1),
+            mtp_depth=0,
+            attn_every=2 if self.attn_every else 0,
+        )
+        if self.mrope:
+            # sections must sum to the reduced head_dim/2 (= 16)
+            kw["mrope_sections"] = (4, 6, 6)
+        if self.moe is not None:
+            kw["moe"] = dataclasses.replace(
+                self.moe, n_experts=4, experts_per_token=2, d_ff_expert=64,
+                n_shared_experts=min(self.moe.n_shared_experts, 1))
+        if self.mla is not None:
+            kw["mla"] = MLAConfig(q_lora_rank=64, kv_lora_rank=32,
+                                  qk_nope_head_dim=16, qk_rope_head_dim=16,
+                                  v_head_dim=16)
+        if self.ssm is not None:
+            kw["ssm"] = dataclasses.replace(
+                self.ssm, state_dim=16, head_dim=16, chunk_size=32)
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """An assigned input shape."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str                          # train | prefill | decode
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4_096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524_288, 1, "decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}

@@ -1,0 +1,29 @@
+"""deepseek-v3-671b — MLA + 256-expert top-8 MoE + MTP [arXiv:2412.19437].
+
+61 layers (first 3 dense), d_model=7168, 128 heads, MLA (q_lora 1536,
+kv_lora 512, nope 128 + rope 64, v 128), 1 shared + 256 routed experts
+(d_ff_expert=2048), top-8, vocab 129280, MTP depth 1, aux-loss-free
+(bias) balancing — which IS the STRADS step-3 mechanism (DESIGN.md §5).
+"""
+from repro.configs.base import ArchConfig, MLAConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=128,
+    n_kv_heads=128,
+    d_ff=18432,            # dense-layer FFN width (first 3 layers)
+    vocab_size=129280,
+    activation="silu",
+    first_k_dense=3,
+    mtp_depth=1,
+    mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512,
+                  qk_nope_head_dim=128, qk_rope_head_dim=64,
+                  v_head_dim=128),
+    moe=MoEConfig(n_experts=256, experts_per_token=8, d_ff_expert=2048,
+                  n_shared_experts=1, capacity_factor=1.25,
+                  router_balance="strads_bias", bias_update_rate=1e-3),
+    source="arXiv:2412.19437 (DeepSeek-V3 technical report)",
+)

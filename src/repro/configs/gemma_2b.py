@@ -1,0 +1,23 @@
+"""gemma-2b — dense, GeGLU, MQA, head_dim=256 [arXiv:2403.08295].
+
+18 layers, d_model=2048, 8 heads with 1 KV head (MQA), head_dim=256,
+d_ff=16384, vocab 256000, GeGLU activation, embeddings scaled by sqrt(d),
+tied embeddings.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma-2b",
+    family="dense",
+    n_layers=18,
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=1,
+    d_ff=16384,
+    vocab_size=256000,
+    head_dim=256,
+    activation="gelu",
+    tie_embeddings=True,
+    embed_scale=True,
+    source="arXiv:2403.08295 (Gemma); hf:google/gemma-2b",
+)

@@ -1,0 +1,22 @@
+"""llama3.2-3b — dense GQA decoder [hf:meta-llama/Llama-3.2-3B].
+
+28 layers, d_model=3072, 24 heads (kv=8, head_dim=128), d_ff=8192,
+vocab 128256, rope_theta=500000, SwiGLU, tied embeddings.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama3.2-3b",
+    family="dense",
+    n_layers=28,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab_size=128256,
+    head_dim=128,
+    rope_theta=500000.0,
+    activation="silu",
+    tie_embeddings=True,
+    source="hf:meta-llama/Llama-3.2-3B (config.json)",
+)

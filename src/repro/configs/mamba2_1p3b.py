@@ -1,0 +1,20 @@
+"""mamba2-1.3b — SSD (state-space duality), attention-free [arXiv:2405.21060].
+
+48 layers, d_model=2048, vocab 50280 (GPT-NeoX tokenizer), ssm_state=128,
+expand=2 (d_inner=4096), head_dim=64 → 64 SSD heads, 1 B/C group.
+"""
+from repro.configs.base import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=64,            # SSD heads (d_inner / head_dim)
+    n_kv_heads=64,
+    d_ff=0,                # attention-free, no MLP blocks
+    vocab_size=50280,
+    source="arXiv:2405.21060 (Mamba-2); state-spaces/mamba2-1.3b card",
+    ssm=SSMConfig(state_dim=128, n_groups=1, expand=2, head_dim=64,
+                  conv_dim=4, chunk_size=256),
+)

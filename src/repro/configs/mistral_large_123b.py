@@ -1,0 +1,21 @@
+"""mistral-large-123b — dense GQA [hf:mistralai/Mistral-Large-Instruct-2407].
+
+88 layers, d_model=12288, 96 heads (kv=8, head_dim=128), d_ff=28672,
+vocab 32768.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mistral-large-123b",
+    family="dense",
+    n_layers=88,
+    d_model=12288,
+    n_heads=96,
+    n_kv_heads=8,
+    d_ff=28672,
+    vocab_size=32768,
+    head_dim=128,
+    rope_theta=1000000.0,
+    activation="silu",
+    source="hf:mistralai/Mistral-Large-Instruct-2407 (config.json)",
+)

@@ -1,0 +1,23 @@
+"""musicgen-medium — decoder-only over EnCodec tokens [arXiv:2306.05284].
+
+48 layers, d_model=1536, 24 heads (kv=24, MHA), d_ff=6144, K=4 EnCodec
+codebooks with 2048-entry vocabularies (delay interleave pattern applied in
+the data pipeline); 4 LM heads.  The EnCodec conv codec itself is the
+stubbed frontend — the model consumes its token streams directly.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="musicgen-medium",
+    family="audio",
+    n_layers=48,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=24,
+    d_ff=6144,
+    vocab_size=2048,
+    activation="gelu",
+    n_codebooks=4,
+    frontend="audio",
+    source="arXiv:2306.05284 (MusicGen); hf:facebook/musicgen-medium",
+)

@@ -1,0 +1,24 @@
+"""olmoe-1b-7b — MoE, 64 experts top-8 [arXiv:2409.02060].
+
+16 layers, d_model=2048, 16 heads (kv=16, MHA), d_ff_expert=1024,
+vocab 50304, qk-norm, no shared experts, aux-loss balancing (paper default;
+STRADS bias balancing is the beyond-paper variant).
+"""
+from repro.configs.base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="olmoe-1b-7b",
+    family="moe",
+    n_layers=16,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1024,
+    vocab_size=50304,
+    qk_norm=True,
+    activation="silu",
+    moe=MoEConfig(n_experts=64, experts_per_token=8, d_ff_expert=1024,
+                  n_shared_experts=0, capacity_factor=1.25,
+                  router_balance="aux_loss", aux_loss_weight=0.01),
+    source="arXiv:2409.02060 (OLMoE-1B-7B)",
+)

@@ -1,0 +1,27 @@
+"""qwen2-vl-2b — VLM: dense GQA backbone + M-RoPE [arXiv:2409.12191].
+
+28 layers, d_model=1536, 12 heads (kv=2), d_ff=8960, vocab 151936.
+M-RoPE sections (16, 24, 24) over head_dim/2=64 frequency slots.
+The ViT frontend is a stub: input_specs supplies patch embeddings.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    n_layers=28,
+    d_model=1536,
+    n_heads=12,
+    n_kv_heads=2,
+    d_ff=8960,
+    vocab_size=151936,
+    head_dim=128,
+    rope_theta=1000000.0,
+    mrope=True,
+    mrope_sections=(16, 24, 24),
+    activation="silu",
+    tie_embeddings=True,
+    frontend="vision",
+    frontend_frac=0.25,
+    source="arXiv:2409.12191 (Qwen2-VL); hf:Qwen/Qwen2-VL-2B-Instruct",
+)

@@ -1,0 +1,22 @@
+"""qwen3-32b — dense GQA with qk-norm [hf:Qwen/Qwen3-32B].
+
+64 layers, d_model=5120, 64 heads (kv=8, head_dim=128), d_ff=25600,
+vocab 151936, qk_norm, rope_theta=1e6.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=25600,
+    vocab_size=151936,
+    head_dim=128,
+    qk_norm=True,
+    rope_theta=1000000.0,
+    activation="silu",
+    source="hf:Qwen/Qwen3-32B (config.json); assignment card cites Qwen3-8B",
+)

@@ -1,0 +1,23 @@
+"""zamba2-2.7b — hybrid: Mamba2 backbone + shared attention [arXiv:2411.15242].
+
+54 Mamba2 layers, d_model=2560, ssm_state=64; one *shared* attention+MLP
+block (32 heads, kv=32, d_ff=10240) applied every 6 SSM layers (9
+applications, one weight set — Zamba2's parameter sharing), vocab 32000.
+"""
+from repro.configs.base import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    n_layers=54,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=10240,
+    vocab_size=32000,
+    attn_every=6,
+    activation="gelu",
+    ssm=SSMConfig(state_dim=64, n_groups=1, expand=2, head_dim=64,
+                  conv_dim=4, chunk_size=256),
+    source="arXiv:2411.15242 (Zamba2); hf:Zyphra/Zamba2-2.7B",
+)

@@ -1,0 +1,37 @@
+"""The paper's primary contribution: SAP dynamic block scheduling + STRADS.
+
+Modules:
+    importance  — SAP step 1: p(j) state + Gumbel top-k candidate sampling
+    dependency  — SAP step 2: coupling matrix + greedy conflict-free blocks
+    balance     — SAP step 3: LPT block merge + dynamic (MoE) load balancing
+    progress    — SAP step 4: progress measures + convergence monitor
+    sap         — the jit-able four-step round
+    scheduler   — STRADS: S scheduler shards, round-robin dispatch, shard_map
+"""
+from repro.core.balance import (BalanceState, bias_balance_update, imbalance,
+                                init_balance, lpt_assign, makespan,
+                                uniform_assign)
+from repro.core.dependency import (candidate_gram, greedy_conflict_free,
+                                   select_block)
+from repro.core.importance import (ImportanceState, importance_probs,
+                                   init_importance, sample_candidates,
+                                   update_importance)
+from repro.core.progress import (ConvergenceMonitor, delta_magnitude,
+                                 init_monitor, monitor_step, residual_change)
+from repro.core.sap import SAPConfig, SAPRoundInfo, make_sap_init, sap_round
+from repro.core.scheduler import (StradsState, make_sharded_selector,
+                                  strads_init, strads_report, strads_round,
+                                  strads_select)
+
+__all__ = [
+    "BalanceState", "bias_balance_update", "imbalance", "init_balance",
+    "lpt_assign", "makespan", "uniform_assign",
+    "candidate_gram", "greedy_conflict_free", "select_block",
+    "ImportanceState", "importance_probs", "init_importance",
+    "sample_candidates", "update_importance",
+    "ConvergenceMonitor", "delta_magnitude", "init_monitor", "monitor_step",
+    "residual_change",
+    "SAPConfig", "SAPRoundInfo", "make_sap_init", "sap_round",
+    "StradsState", "make_sharded_selector", "strads_init", "strads_report",
+    "strads_round", "strads_select",
+]

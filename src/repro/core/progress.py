@@ -1,0 +1,56 @@
+"""SAP step 4 — progress monitoring.
+
+"Depending on the ML algorithm being run, the definition of progress can
+vary: examples include the magnitude of change in each variable, or the
+change in residuals due to variable updates." (paper Sec. 2 step 4)
+
+This module provides the progress measures the apps plug into
+``define_sampling`` and the convergence bookkeeping (objective traces,
+stopping rule) shared by every experiment.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def delta_magnitude(old: jax.Array, new: jax.Array) -> jax.Array:
+    """|β^(t) − β^(t−1)| — the paper's Lasso progress measure."""
+    return jnp.abs(new - old)
+
+
+def residual_change(r_old: jax.Array, r_new: jax.Array) -> jax.Array:
+    """‖Δr‖₂ — the residual-based progress measure the paper mentions."""
+    return jnp.linalg.norm(r_new - r_old)
+
+
+class ConvergenceMonitor(NamedTuple):
+    """Objective-delta stopping rule (paper Sec. 5.1: 'a minimum threshold
+    on change in objective value')."""
+
+    best: jax.Array         # () f32 best objective so far
+    stall: jax.Array        # () i32 consecutive low-progress rounds
+    tol: jax.Array          # () f32 relative-improvement threshold
+    patience: jax.Array     # () i32
+
+
+def init_monitor(tol: float = 1e-6, patience: int = 20) -> ConvergenceMonitor:
+    return ConvergenceMonitor(
+        best=jnp.asarray(jnp.inf, jnp.float32),
+        stall=jnp.asarray(0, jnp.int32),
+        tol=jnp.asarray(tol, jnp.float32),
+        patience=jnp.asarray(patience, jnp.int32),
+    )
+
+
+def monitor_step(mon: ConvergenceMonitor, objective: jax.Array):
+    """Returns (new_monitor, converged: bool scalar)."""
+    obj = objective.astype(jnp.float32)
+    rel = (mon.best - obj) / jnp.maximum(jnp.abs(mon.best), 1e-30)
+    improved = rel > mon.tol
+    stall = jnp.where(improved, 0, mon.stall + 1)
+    best = jnp.minimum(mon.best, obj)
+    new = mon._replace(best=best, stall=stall)
+    return new, stall >= mon.patience

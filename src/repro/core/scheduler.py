@@ -1,0 +1,173 @@
+"""STRADS — the distributed implementation of SAP (paper Sec. 3).
+
+The J model variables are statically partitioned over ``S`` scheduler shards
+(*strided*: shard ``s`` owns ``{j : j mod S = s}`` — a random-equivalent
+assignment that keeps every shard's importance distribution ``p_s(j)``
+similar in shape to the global ``p(j)``, the paper's bootstrap argument).
+Each shard runs the four SAP steps on its own variables only, and shards
+**take turns** (round-robin) dispatching their prepared block to the P
+workers: at global iteration ``t`` the active shard is ``t mod S``.  A shard
+therefore has S rounds of slack to prepare its next block — the paper's
+scheduler-latency-hiding — which in our SPMD rendering means shard state
+updates are embarrassingly parallel across the mesh.
+
+Two execution paths:
+
+* :func:`strads_round` — single-program path with the shard axis as a
+  leading array dimension (used by apps/tests; jit+scan friendly).
+* :func:`make_sharded_selector` — ``shard_map`` path that places each
+  scheduler shard on its own mesh slot so selection state never leaves the
+  owning device (used by ``repro.launch`` on real meshes).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.dependency import select_block
+from repro.core.importance import INIT_DELTA, ImportanceState
+from repro.core.sap import CouplingFn, SAPConfig, SAPRoundInfo, UpdateFn
+
+
+class StradsState(NamedTuple):
+    """S scheduler shards' importance state, stacked on axis 0."""
+
+    weights: jax.Array      # (S, J/S) f32
+    visits: jax.Array       # (S, J/S) i32
+    eta: jax.Array          # () f32
+    power: jax.Array        # () f32
+
+    @property
+    def n_shards(self) -> int:
+        return self.weights.shape[0]
+
+    @property
+    def vars_per_shard(self) -> int:
+        return self.weights.shape[1]
+
+
+def strads_init(n_vars: int, n_shards: int, cfg: SAPConfig) -> StradsState:
+    cfg.validate()
+    if n_vars % n_shards:
+        raise ValueError(f"J={n_vars} not divisible by S={n_shards}")
+    js = n_vars // n_shards
+    if js < cfg.n_candidates:
+        raise ValueError(
+            f"each shard owns {js} vars < P'={cfg.n_candidates}; "
+            f"reduce S or P'")
+    return StradsState(
+        weights=jnp.full((n_shards, js), INIT_DELTA, jnp.float32),
+        visits=jnp.zeros((n_shards, js), jnp.int32),
+        eta=jnp.asarray(cfg.eta, jnp.float32),
+        power=jnp.asarray(cfg.power, jnp.float32),
+    )
+
+
+def local_to_global(shard: jax.Array, local_idx: jax.Array,
+                    n_shards: int) -> jax.Array:
+    """Strided ownership: global j = local·S + s."""
+    return local_idx * n_shards + shard
+
+
+def global_to_local(global_idx: jax.Array, n_shards: int) -> jax.Array:
+    return global_idx // n_shards
+
+
+def _shard_importance(st: StradsState, s: jax.Array) -> ImportanceState:
+    return ImportanceState(weights=st.weights[s], visits=st.visits[s],
+                           eta=st.eta, power=st.power)
+
+
+def strads_select(key: jax.Array, st: StradsState, shard: jax.Array,
+                  app_state: Any, coupling_fn: CouplingFn,
+                  cfg: SAPConfig) -> Tuple[jax.Array, jax.Array]:
+    """SAP steps 1–2 on one scheduler shard; returns global (idx, mask)."""
+    from repro.core.importance import sample_candidates
+    imp = _shard_importance(st, shard)
+    cand_local = sample_candidates(key, imp, cfg.n_candidates)
+    cand_global = local_to_global(shard, cand_local, st.n_shards)
+    coupling = coupling_fn(app_state, cand_global)
+    priority = imp.weights[cand_local]
+    return select_block(cand_global, coupling, priority, cfg.rho,
+                        cfg.n_workers)
+
+
+def strads_report(st: StradsState, shard: jax.Array, idx_global: jax.Array,
+                  deltas: jax.Array, mask: jax.Array) -> StradsState:
+    """SAP step 4 on the owning shard."""
+    local = global_to_local(idx_global, st.n_shards)
+    new_w = jnp.abs(deltas).astype(jnp.float32) + st.eta
+    old = st.weights[shard, local]
+    new_w = jnp.where(mask, new_w, old)
+    return st._replace(
+        weights=st.weights.at[shard, local].set(new_w),
+        visits=st.visits.at[shard, local].add(mask.astype(jnp.int32)),
+    )
+
+
+def strads_round(t: jax.Array, key: jax.Array, st: StradsState,
+                 app_state: Any, coupling_fn: CouplingFn,
+                 update_fn: UpdateFn,
+                 cfg: SAPConfig) -> Tuple[StradsState, Any, SAPRoundInfo]:
+    """One STRADS iteration: shard ``t mod S`` dispatches (round-robin)."""
+    shard = jnp.asarray(t) % st.n_shards
+    idx, mask = strads_select(key, st, shard, app_state, coupling_fn, cfg)
+    app_state, deltas = update_fn(app_state, idx, mask)
+    deltas = jnp.where(mask, deltas, 0.0)
+    st = strads_report(st, shard, idx, deltas, mask)
+    info = SAPRoundInfo(idx=idx, mask=mask, deltas=deltas,
+                        n_dispatched=jnp.sum(mask.astype(jnp.int32)))
+    return st, app_state, info
+
+
+# ---------------------------------------------------------------------------
+# shard_map path: one scheduler shard per mesh slot.
+# ---------------------------------------------------------------------------
+
+def make_sharded_selector(mesh: Mesh, axis: str, coupling_fn: CouplingFn,
+                          cfg: SAPConfig):
+    """Build a ``shard_map``-ed selection step over mesh axis ``axis``.
+
+    Every mesh slot runs SAP steps 1–2 for its own scheduler shard *every*
+    round (cheap, local); the active shard's block is then broadcast with a
+    tiny collective.  This realizes the paper's round-robin latency hiding:
+    by the time shard s is active it has had S rounds to refresh its state.
+
+    The returned function has signature
+    ``(t, keys (S,2), st, app_state) -> (idx (P,), mask (P,))``
+    where ``st`` is a :class:`StradsState` sharded on axis 0.
+    """
+    n_shards = mesh.shape[axis]
+
+    def _local(t, keys, weights, visits, eta, power, app_state):
+        # Executes per-shard: axis-local shapes (1, J/S).
+        s = jax.lax.axis_index(axis)
+        st_local = StradsState(weights=weights, visits=visits,
+                               eta=eta, power=power)
+        idx, mask = strads_select(
+            keys[0], st_local, jnp.zeros((), jnp.int32), app_state,
+            lambda a, c: coupling_fn(a, c * n_shards + s), cfg)
+        # strads_select used S=1 locally; re-map to true global ids.
+        idx = idx * n_shards + s
+        active = (t % n_shards) == s
+        # Zero out non-active shards, then sum-reduce: only the active
+        # shard's block survives (a (P,)-sized collective — negligible).
+        idx = jnp.where(active, idx, 0)
+        mask = jnp.where(active, mask, False)
+        idx = jax.lax.psum(idx, axis)
+        mask = jax.lax.psum(mask.astype(jnp.int32), axis) > 0
+        return idx, mask
+
+    return jax.shard_map(
+        _local, mesh=mesh,
+        in_specs=(P(), P(axis), P(axis), P(axis), P(), P(), P()),
+        out_specs=(P(), P()),
+        # the fori_loop carry inside greedy selection starts axis-invariant
+        # and becomes axis-varying (it depends on axis_index); the explicit
+        # psum at the end re-establishes replication, so skip VMA checking.
+        check_vma=False,
+    )

@@ -1,0 +1,6 @@
+"""Data substrate: synthetic pipelines for every experiment."""
+from repro.data.pipeline import (DataConfig, TokenPipeline, lm_batches,
+                                 musicgen_delay_pattern)
+
+__all__ = ["DataConfig", "TokenPipeline", "lm_batches",
+           "musicgen_delay_pattern"]

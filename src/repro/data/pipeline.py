@@ -1,0 +1,113 @@
+"""Synthetic data pipelines.
+
+Training data for the model zoo is synthetic but *learnable*: a small
+order-k Markov chain over the vocabulary, so a few hundred steps of a ~100M
+model show a genuinely decreasing loss (the end-to-end example's success
+criterion) rather than noise around ln V.
+
+The Lasso/MF synthetic generators live with their apps
+(``repro.apps.lasso.make_synthetic`` / ``repro.apps.matrix_factorization``);
+this module covers token pipelines, including the family-specific extras
+(VLM patch embeddings + M-RoPE positions, MusicGen codebook delay).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.inputs import make_batch
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    markov_order: int = 1
+    markov_temp: float = 0.5     # lower = more predictable = faster loss drop
+    n_states: int = 0            # 0 -> vocab_size
+
+
+class TokenPipeline:
+    """Markov-chain token stream, shaped per (arch × shape).
+
+    Host-side numpy generation (cheap), device arrays out — the standard
+    input-pipeline split.  Deterministic given (seed, step).
+    """
+
+    def __init__(self, cfg: ArchConfig, shape: ShapeConfig,
+                 data_cfg: DataConfig = DataConfig(),
+                 batch_override: int | None = None):
+        self.cfg = cfg
+        self.shape = shape
+        self.data_cfg = data_cfg
+        self.batch = batch_override or shape.global_batch
+        v = data_cfg.n_states or cfg.vocab_size
+        rng = np.random.default_rng(data_cfg.seed)
+        # row-stochastic transition matrix with low entropy
+        logits = rng.normal(size=(v, v)) / data_cfg.markov_temp
+        self._probs = np.exp(logits - logits.max(-1, keepdims=True))
+        self._probs /= self._probs.sum(-1, keepdims=True)
+        self._v = v
+
+    def _chain(self, rng: np.random.Generator, n: int, length: int
+               ) -> np.ndarray:
+        out = np.empty((n, length), np.int32)
+        state = rng.integers(0, self._v, size=n)
+        cum = np.cumsum(self._probs, axis=-1)
+        for t in range(length):
+            out[:, t] = state
+            u = rng.random(n)
+            state = (cum[state] > u[:, None]).argmax(axis=1)
+        return out
+
+    def batch_at(self, step: int) -> Dict[str, jax.Array]:
+        cfg, shape = self.cfg, self.shape
+        rng = np.random.default_rng((self.data_cfg.seed, step))
+        b = self.batch
+        l = shape.seq_len
+        if cfg.family == "vlm":
+            lp = int(l * cfg.frontend_frac)
+            lt = l - lp
+            toks = self._chain(rng, b, lt)
+            key = jax.random.PRNGKey(step)
+            stub = make_batch(key, cfg, shape, batch_override=b)
+            return {"tokens": jnp.asarray(toks),
+                    "patch_embeds": stub["patch_embeds"],
+                    "positions": stub["positions"]}
+        if cfg.n_codebooks > 1:
+            base = self._chain(rng, b * cfg.n_codebooks, l)
+            toks = base.reshape(b, cfg.n_codebooks, l)
+            toks = musicgen_delay_pattern(toks)
+            return {"tokens": jnp.asarray(toks)}
+        return {"tokens": jnp.asarray(self._chain(rng, b, l))}
+
+    def __iter__(self) -> Iterator[Dict[str, jax.Array]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+def musicgen_delay_pattern(tokens: np.ndarray,
+                           pad_token: int = 0) -> np.ndarray:
+    """MusicGen delay interleave (arXiv:2306.05284 §2.2): codebook k is
+    shifted right by k steps so the model predicts codebook k of frame t
+    at time t+k — parallel sampling with one-step codebook dependency."""
+    b, k, l = tokens.shape
+    out = np.full_like(tokens, pad_token)
+    for i in range(k):
+        out[:, i, i:] = tokens[:, i, :l - i]
+    return out
+
+
+def lm_batches(cfg: ArchConfig, shape: ShapeConfig, n: int,
+               data_cfg: DataConfig = DataConfig(),
+               batch_override: int | None = None):
+    """Finite batch iterator (examples / trainer)."""
+    pipe = TokenPipeline(cfg, shape, data_cfg, batch_override)
+    for step in range(n):
+        yield pipe.batch_at(step)

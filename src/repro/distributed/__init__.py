@@ -1,0 +1,5 @@
+"""Distribution substrate: sharding rules and sharded step builders."""
+from repro.distributed.sharding import (batch_pspecs, cache_pspecs,
+                                        param_pspecs, shardings_for)
+
+__all__ = ["batch_pspecs", "cache_pspecs", "param_pspecs", "shardings_for"]

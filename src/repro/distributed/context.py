@@ -1,0 +1,64 @@
+"""Optional mesh context so model code can emit sharding constraints
+without depending on a mesh (CPU tests run constraint-free).
+
+The launch layer (dryrun/train/serve) installs the active mesh via
+:func:`use_mesh`; :func:`constrain` then pins activations with
+``with_sharding_constraint``.  Outside any mesh context it is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE: list = []
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    _ACTIVE.append(mesh)
+    try:
+        yield mesh
+    finally:
+        _ACTIVE.pop()
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+def dp_axes(mesh: Mesh):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return axes if axes else None
+
+
+def _axis_size(mesh: Mesh, ax) -> int:
+    if ax is None:
+        return 1
+    axes = ax if isinstance(ax, tuple) else (ax,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape.get(a, 1)
+    return n
+
+
+def constrain(x: jax.Array, *spec) -> jax.Array:
+    """Apply a sharding constraint if a mesh context is active.
+
+    Axis tokens: ``"dp"`` expands to the (pod, data) batch axes; any axis
+    that does not divide its dimension is dropped (replicated).
+    """
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    out = []
+    for dim, ax in zip(x.shape, spec):
+        if ax == "dp":
+            ax = dp_axes(mesh)
+        if ax is not None and dim % _axis_size(mesh, ax) != 0:
+            ax = None
+        out.append(ax)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*out)))

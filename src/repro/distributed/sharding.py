@@ -1,0 +1,172 @@
+"""Sharding rules: parameter-path regex → PartitionSpec (MaxText-style).
+
+Mesh axes:
+    ``pod``   — pure data parallelism across pods (gradients all-reduce over
+                DCN; parameters are NOT sharded over pod)
+    ``data``  — FSDP: parameters + optimizer state sharded on a fan axis
+    ``model`` — tensor/expert parallelism: heads / FFN / experts
+
+Rules match the *trailing* dimensions of each leaf; layer-stacked leaves
+(leading ``n_layers`` axis from the scan stacks) get a ``None`` prepended
+automatically, so the same rule covers stacked and unstacked instances.
+
+Divisibility guard: any axis whose size does not divide evenly by the mesh
+axis is demoted to ``None`` (replicated) — this is what lets e.g. gemma's
+single KV head or a batch-1 long-context decode lower on the same mesh.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# (regex on the leaf path, spec for the trailing dims)
+PARAM_RULES: Tuple[Tuple[str, P], ...] = (
+    # embeddings / head
+    (r"embed$",                 P("model", "data")),        # (V, D)
+    (r"lm_head$",               P("data", "model")),        # (D, V)
+    # attention (GQA)
+    (r"(wq|wk|wv)$",            P("data", "model")),
+    (r"wo$",                    P("model", "data")),
+    # attention (MLA)
+    (r"(wq_a|wkv_a)$",          P("data", None)),
+    (r"(wq_b|wk_b|wv_b)$",      P(None, "model")),
+    # dense MLP
+    (r"(wi_gate|wi_up)$",       P("data", "model")),
+    (r"wo_mlp$",                P("model", "data")),
+    # MoE: experts shard the model axis (expert parallelism)
+    (r"router$",                P("data", None)),
+    (r"balance_bias$",          P(None)),
+    (r"(we_gate|we_up)$",       P("model", "data", None)),  # (E, D, F)
+    (r"we_down$",               P("model", None, "data")),  # (E, F, D)
+    (r"(ws_gate|ws_up)$",       P("data", "model")),
+    (r"ws_down$",               P("model", "data")),
+    # SSM
+    (r"in_proj$",               P("data", "model")),
+    (r"out_proj$",              P("model", "data")),
+    (r"conv_w$",                P(None, "model")),
+    (r"conv_b$",                P("model")),
+    (r"(A_log|dt_bias)$",       P("model")),
+    (r"/D$",                    P("model")),
+    (r"norm_scale$",            P("model")),
+    # MTP projection
+    (r"proj$",                  P("data", "model")),
+    # norm scales
+    (r"scale$",                 P(None)),
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/" + "/".join(parts)
+
+
+def _guard(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Replicate any dim that does not divide by its mesh axis product."""
+    out = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape.get(a, 1)
+        out.append(ax if dim % size == 0 else None)
+    return P(*out)
+
+
+def spec_for_path(path: str, ndim: int, shape: Tuple[int, ...],
+                  mesh: Mesh) -> P:
+    for rx, spec in PARAM_RULES:
+        if re.search(rx, path):
+            pad = ndim - len(spec)
+            if pad < 0:          # rule wider than leaf (shouldn't happen)
+                return P()
+            full = P(*([None] * pad + list(spec)))
+            return _guard(full, shape, mesh)
+    return P()                   # replicate by default
+
+
+def param_pspecs(params_shape: Any, mesh: Mesh) -> Any:
+    """PartitionSpec pytree for a params (or ShapeDtypeStruct) pytree."""
+    def one(path, leaf):
+        return spec_for_path(_path_str(path), leaf.ndim, leaf.shape, mesh)
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def _dp_axes(mesh: Mesh):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return axes if axes else None
+
+
+def batch_pspecs(batch_shape: Dict[str, Any], mesh: Mesh) -> Dict[str, P]:
+    """Shard every batch input on its batch axis over (pod, data)."""
+    dp = _dp_axes(mesh)
+    dp_size = 1
+    if dp:
+        for a in dp:
+            dp_size *= mesh.shape[a]
+
+    out = {}
+    for name, leaf in batch_shape.items():
+        bdim = 1 if name == "positions" else 0   # positions: (3, B, L)
+        spec = [None] * len(leaf.shape)
+        if dp and leaf.shape[bdim] % dp_size == 0:
+            spec[bdim] = dp
+        out[name] = P(*spec)
+    return out
+
+
+def cache_pspecs(caches_shape: Any, mesh: Mesh) -> Any:
+    """Shard caches: batch over (pod, data), heads/state over model.
+
+    Cache leaves (stacked over layers):
+        kv.k/v       (Lyr, B, S, Hkv, Dh) → (None, dp, None, model, None)
+        mla.c_kv     (Lyr, B, S, R)       → (None, dp, None, model)
+        mla.k_rope   (Lyr, B, S, Dr)      → (None, dp, None, None)
+        ssm_state    (Lyr, B, H, P, N)    → (None, dp, model, None, None)
+        conv_state   (Lyr, B, W, CH)      → (None, dp, None, model)
+        pos          (Lyr,)               → (None,)
+    """
+    dp = _dp_axes(mesh)
+    dp_size = 1
+    if dp:
+        for a in dp:
+            dp_size *= mesh.shape[a]
+
+    def one(path, leaf):
+        name = _path_str(path)
+        nd = leaf.ndim
+        if nd <= 1:
+            return P()
+        spec = [None] * nd
+        # batch axis is dim 1 on stacked caches
+        if dp and leaf.shape[1] % dp_size == 0:
+            spec[1] = dp
+        if name.endswith("/k") or name.endswith("/v"):
+            spec[3] = "model"
+        elif "c_kv" in name:
+            spec[3] = "model"
+        elif "ssm_state" in name:
+            spec[2] = "model"
+        elif "conv_state" in name:
+            spec[3] = "model"
+        return _guard(P(*spec), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, caches_shape)
+
+
+def shardings_for(pspec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: fused parallel-CD Lasso block step (paper Eq. 2).
+
+For the dispatched block B (the ≤P coordinates SAP selected):
+
+    z      = X_Bᵀ r + β_B            (correlation against the residual)
+    β'_B   = soft_threshold(z, λ)
+    δ      = (β'_B − β_B) · mask
+    r_out  = r − X_B δ               (residual absorbs the block's update)
+
+Two MXU passes over the (N × B) slice.  Pass 1 marches N in VMEM-resident
+chunks accumulating z, emitting δ once at the last chunk; pass 2 re-streams
+the same chunks to apply the rank-B residual correction.  B is the worker
+count (≤ a few hundred), so both matmul dims are 128-padded.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _delta_kernel(xb_ref, r_ref, beta_ref, lam_ref, mask_ref, delta_ref,
+                  acc_ref, *, nk: int):
+    """Grid (k,): accumulate z = X_Bᵀ r over N chunks; soft-threshold at
+    the end.  delta_ref: (1, B)."""
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = beta_ref[...].astype(jnp.float32)
+
+    # (bk, B)ᵀ @ (1, bk)ᵀ — keep everything 2D for the TPU layout.
+    acc_ref[...] += jax.lax.dot_general(
+        r_ref[...], xb_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        z = acc_ref[...]
+        lam = lam_ref[0]
+        new_b = jnp.sign(z) * jnp.maximum(jnp.abs(z) - lam, 0.0)
+        delta = new_b - beta_ref[...].astype(jnp.float32)
+        delta = jnp.where(mask_ref[...] != 0, delta, 0.0)
+        delta_ref[...] = delta.astype(delta_ref.dtype)
+
+
+def _resid_kernel(xb_ref, r_ref, delta_ref, out_ref):
+    """Grid (k,): r_out chunk = r chunk − X_B chunk @ δ."""
+    corr = jax.lax.dot_general(
+        xb_ref[...], delta_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (bk, 1)
+    out_ref[...] = (r_ref[...] -
+                    corr.reshape(r_ref.shape).astype(jnp.float32)
+                    ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def cd_update(xb: jax.Array, resid: jax.Array, beta: jax.Array,
+              lam: jax.Array | float, mask: jax.Array | None = None, *,
+              bk: int = 1024, interpret: bool = False):
+    """Fused CD block update.  xb: (N, B), resid: (N,), beta: (B,).
+
+    Returns (delta (B,), resid_out (N,)).
+    """
+    n, b = xb.shape
+    if mask is None:
+        mask = jnp.ones((b,), dtype=jnp.int32)
+    mask = mask.astype(jnp.int32)
+    b_pad = -b % 128
+    n_pad = -n % bk
+    if b_pad:
+        xb = jnp.pad(xb, ((0, 0), (0, b_pad)))
+        beta = jnp.pad(beta, (0, b_pad))
+        mask = jnp.pad(mask, (0, b_pad))            # padded slots masked out
+    if n_pad:
+        xb = jnp.pad(xb, ((0, n_pad), (0, 0)))
+        resid_p = jnp.pad(resid, (0, n_pad))
+    else:
+        resid_p = resid
+    np_, bp = xb.shape
+    nk = np_ // bk
+    lam_arr = jnp.asarray(lam, jnp.float32).reshape(1)
+
+    delta = pl.pallas_call(
+        functools.partial(_delta_kernel, nk=nk),
+        grid=(nk,),
+        in_specs=[
+            pl.BlockSpec((bk, bp), lambda k: (k, 0)),        # X_B chunk
+            pl.BlockSpec((1, bk), lambda k: (0, k)),         # r chunk (row)
+            pl.BlockSpec((1, bp), lambda k: (0, 0)),         # beta
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),  # lam
+            pl.BlockSpec((1, bp), lambda k: (0, 0)),         # mask
+        ],
+        out_specs=pl.BlockSpec((1, bp), lambda k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, bp), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, bp), jnp.float32)],
+        interpret=interpret,
+    )(xb, resid_p.reshape(1, -1), beta.reshape(1, -1), lam_arr,
+      mask.reshape(1, -1))
+
+    resid_out = pl.pallas_call(
+        _resid_kernel,
+        grid=(nk,),
+        in_specs=[
+            pl.BlockSpec((bk, bp), lambda k: (k, 0)),
+            pl.BlockSpec((1, bk), lambda k: (0, k)),
+            pl.BlockSpec((1, bp), lambda k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bk), lambda k: (0, k)),
+        out_shape=jax.ShapeDtypeStruct((1, np_), resid.dtype),
+        interpret=interpret,
+    )(xb, resid_p.reshape(1, -1), delta)
+
+    return (delta[0, :b].astype(beta.dtype),
+            resid_out[0, :n])

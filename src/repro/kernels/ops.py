@@ -1,0 +1,65 @@
+"""Dispatch layer for the Pallas kernels.
+
+Every op takes ``impl``:
+    "xla"       — pure-jnp reference path (default; CPU + dry-run safe)
+    "pallas"    — compiled Pallas TPU kernel (the deployment path)
+    "interpret" — Pallas kernel body interpreted on CPU (correctness
+                  validation of the real kernel logic without a TPU)
+
+The model zoo and apps call these entry points so the implementation can be
+flipped per-deployment (``repro.configs``/launch flags) without touching
+call sites.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import cd_update as _cd
+from repro.kernels import chunked as _chunked
+from repro.kernels import flash_attention as _fa
+from repro.kernels import gram as _gram
+from repro.kernels import ref as _ref
+
+DEFAULT_IMPL = "xla"
+_VALID = ("xla", "pallas", "interpret", "chunked")
+
+
+def _check(impl: str) -> str:
+    if impl not in _VALID:
+        raise ValueError(f"impl must be one of {_VALID}, got {impl!r}")
+    return impl
+
+
+def gram(x: jax.Array, *, absolute: bool = True,
+         impl: str = DEFAULT_IMPL) -> jax.Array:
+    """C = (|)XᵀX(|) — SAP dependency-discovery hot spot."""
+    impl = _check(impl)
+    if impl in ("xla", "chunked"):      # no chunked variant; jnp path
+        return _ref.gram(x, absolute=absolute)
+    return _gram.gram(x, absolute=absolute, interpret=(impl == "interpret"))
+
+
+def cd_update(xb, resid, beta, lam, mask=None, *, impl: str = DEFAULT_IMPL):
+    """Fused Lasso parallel-CD block step."""
+    impl = _check(impl)
+    if impl in ("xla", "chunked"):      # no chunked variant; jnp path
+        return _ref.cd_update(xb, resid, beta, lam, mask)
+    return _cd.cd_update(xb, resid, beta, lam, mask,
+                         interpret=(impl == "interpret"))
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    impl: str = DEFAULT_IMPL):
+    """Blocked online-softmax attention (GQA-aware, sliding-window).
+
+    ``impl="chunked"`` is the pure-XLA flash path (custom VJP, no L×L
+    materialization) — the §Perf beyond-paper variant usable on any
+    backend; ``"pallas"`` is the TPU kernel."""
+    impl = _check(impl)
+    if impl == "xla":
+        return _ref.flash_attention(q, k, v, causal=causal, window=window)
+    if impl == "chunked":
+        return _chunked.flash_attention_chunked(q, k, v, causal=causal,
+                                                window=window)
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               interpret=(impl == "interpret"))

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function is the mathematical definition, written with no tiling or
+performance tricks, used by tests to ``assert_allclose`` against the kernels
+across shape/dtype sweeps and by the model zoo as the CPU execution path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gram(x: jax.Array, *, absolute: bool = True) -> jax.Array:
+    """C = (|)XᵀX(|) in f32 accumulation.  x: (N, P)."""
+    g = jnp.dot(x.T.astype(jnp.float32), x.astype(jnp.float32))
+    return jnp.abs(g) if absolute else g
+
+
+def cd_update(xb: jax.Array, resid: jax.Array, beta: jax.Array,
+              lam: jax.Array | float,
+              mask: jax.Array | None = None):
+    """Fused parallel-CD Lasso block step (paper Eq. 2).
+
+    xb: (N, B) unit-norm columns of the dispatched block
+    resid: (N,) current residual, beta: (B,) current coefficients
+    Returns (delta (B,), resid_out (N,)).
+    """
+    xb32 = xb.astype(jnp.float32)
+    r32 = resid.astype(jnp.float32)
+    z = xb32.T @ r32 + beta.astype(jnp.float32)
+    lam = jnp.asarray(lam, jnp.float32)
+    new_b = jnp.sign(z) * jnp.maximum(jnp.abs(z) - lam, 0.0)
+    delta = new_b - beta.astype(jnp.float32)
+    if mask is not None:
+        delta = jnp.where(mask, delta, 0.0)
+    resid_out = r32 - xb32 @ delta
+    return delta.astype(beta.dtype), resid_out.astype(resid.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    scale: float | None = None) -> jax.Array:
+    """Reference attention.  q: (B, Hq, Lq, D), k/v: (B, Hkv, Lk, D).
+
+    GQA: Hq may be a multiple of Hkv.  ``window > 0`` restricts each query
+    to the last ``window`` keys (sliding-window attention).  When
+    Lq != Lk the queries are aligned to the *end* of the key axis
+    (decode: Lq=1 attends to the whole cache).
+    """
+    b, hq, lq, d = q.shape
+    hkv = k.shape[1]
+    if hq != hkv:
+        k = jnp.repeat(k, hq // hkv, axis=1)
+        v = jnp.repeat(v, hq // hkv, axis=1)
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    lk = k.shape[2]
+    q_pos = jnp.arange(lq) + (lk - lq)          # align to end of keys
+    k_pos = jnp.arange(lk)
+    mask = jnp.ones((lq, lk), dtype=bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,23 @@
+"""Production mesh definitions (functions, not constants — importing this
+module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod.
+
+    Axes: ``pod`` (cross-pod pure DP over DCN), ``data`` (FSDP),
+    ``model`` (tensor/expert parallel over ICI).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist locally, as a (data=1..n, model=1) mesh —
+    used by CPU smoke tests and examples."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,156 @@
+"""The three deployable step functions per architecture, plus their
+shape/sharding machinery — shared by the dry-run, the trainer, and the
+serving engine.
+
+    train_step    (train_4k)     params,opt,batch → params,opt,metrics
+    prefill_step  (prefill_32k)  params,batch → last-logits,caches
+    serve_step    (decode_*)     params,tokens,caches → logits,caches
+
+Decode shapes lower ``serve_step`` — ONE new token against a ``seq_len``
+cache.  ``long_500k`` uses the sub-quadratic path: SSM/hybrid decode on
+their recurrent state; attention archs decode against a sliding-window
+ring buffer of ``cfg.long_context_window`` slots (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.balance import BalanceState, bias_balance_update
+from repro.distributed.sharding import (batch_pspecs, cache_pspecs,
+                                        param_pspecs, shardings_for)
+from repro.models import (decode_step, init_caches, init_params, input_specs,
+                          loss_fn, prefill)
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_warmup
+
+
+# ---------------------------------------------------------------------------
+# step functions (pure; arch config closed over statically)
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig = AdamWConfig(),
+                    *, impl: str = "xla", remat: bool = True,
+                    remat_policy: str = "none",
+                    total_steps: int = 10_000):
+    warmup = max(1, min(200, total_steps // 10))
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, impl=impl, remat=remat,
+                              remat_policy=remat_policy),
+            has_aux=True)(params)
+        lr_scale = cosine_warmup(opt_state.step, warmup, total_steps)
+        params, opt_state, opt_metrics = adamw_update(
+            grads, opt_state, params, opt_cfg, lr_scale)
+        metrics = {**metrics, **opt_metrics}
+        # STRADS dynamic expert balancing: the SAP step-3/4 loop applied to
+        # router bias, fed by observed expert load (DESIGN.md §5) — same
+        # code path (core.balance) as the MF block merge monitor.
+        if (cfg.moe is not None
+                and cfg.moe.router_balance == "strads_bias"):
+            load = metrics["moe_load"]
+            zero = BalanceState(
+                bias=jnp.zeros_like(load), ema_load=jnp.zeros_like(load),
+                rate=jnp.asarray(cfg.moe.bias_update_rate, jnp.float32),
+                decay=jnp.asarray(0.0, jnp.float32))
+            upd = bias_balance_update(zero, load)   # −rate·sign(load−mean)
+            layers = dict(params["layers"])
+            moe_p = dict(layers["moe"])
+            moe_p["balance_bias"] = moe_p["balance_bias"] + upd.bias[None, :]
+            layers["moe"] = moe_p
+            params = {**params, "layers": layers}
+        metrics.pop("moe_load", None)
+        return params, opt_state, metrics
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, *, impl: str = "xla"):
+    def prefill_step(params, batch):
+        return prefill(params, cfg, batch, impl=impl)
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, *, ring: bool = False,
+                    impl: str = "xla"):
+    def serve_step(params, tokens, caches):
+        return decode_step(params, cfg, tokens, caches, ring=ring, impl=impl)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# shape machinery for lowering without allocation
+# ---------------------------------------------------------------------------
+
+def cache_len_for(cfg: ArchConfig, shape: ShapeConfig) -> int:
+    """Cache length for a decode shape: full seq_len, or the ring window
+    on attention archs at 500k (the sub-quadratic carve-out)."""
+    if shape.seq_len >= 500_000 and not cfg.attention_free \
+            and cfg.family != "hybrid":
+        return cfg.long_context_window
+    if cfg.family == "hybrid" and shape.seq_len >= 500_000:
+        return cfg.long_context_window      # shared-attn block windows too
+    return shape.seq_len
+
+
+def is_ring(cfg: ArchConfig, shape: ShapeConfig) -> bool:
+    return shape.seq_len >= 500_000 and cfg.family != "ssm"
+
+
+def abstract_state(cfg: ArchConfig, shape: ShapeConfig, *,
+                   param_dtype=jnp.bfloat16, cache_dtype=jnp.bfloat16
+                   ) -> Dict[str, Any]:
+    """ShapeDtypeStructs for params / optimizer / caches — no allocation."""
+    params_shape = jax.eval_shape(
+        lambda k: init_params(k, cfg, param_dtype),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    out = {"params": params_shape}
+    if shape.mode == "train":
+        out["opt"] = jax.eval_shape(adamw_init, params_shape)
+    if shape.mode == "decode":
+        cl = cache_len_for(cfg, shape)
+        out["caches"] = jax.eval_shape(
+            functools.partial(init_caches, cfg, shape.global_batch, cl,
+                              cache_dtype))
+    return out
+
+
+def step_and_specs(cfg: ArchConfig, shape: ShapeConfig, mesh, *,
+                   impl: str = "xla", remat_policy: str = "none",
+                   param_dtype=jnp.bfloat16):
+    """Build (step_fn, arg ShapeDtypeStructs, in_shardings, out_shardings)
+    for one (arch × input-shape) combination on a mesh."""
+    state = abstract_state(cfg, shape, param_dtype=param_dtype)
+    p_spec = param_pspecs(state["params"], mesh)
+    b_struct = input_specs(cfg, shape)
+    b_spec = batch_pspecs(b_struct, mesh)
+
+    if shape.mode == "train":
+        from jax.sharding import PartitionSpec as P
+        step = make_train_step(cfg, impl=impl, remat_policy=remat_policy)
+        # moments follow the param sharding; step counter replicated
+        opt_spec = type(state["opt"])(step=P(), mu=p_spec, nu=p_spec)
+        args = (state["params"], state["opt"], b_struct)
+        in_specs = (p_spec, opt_spec, b_spec)
+        out_specs = (p_spec, opt_spec, None)
+        return step, args, in_specs, out_specs
+
+    if shape.mode == "prefill":
+        step = make_prefill_step(cfg, impl=impl)
+        args = (state["params"], b_struct)
+        in_specs = (p_spec, b_spec)
+        out_specs = None
+        return step, args, in_specs, out_specs
+
+    # decode
+    step = make_serve_step(cfg, ring=is_ring(cfg, shape), impl=impl)
+    c_spec = cache_pspecs(state["caches"], mesh)
+    tok_struct = b_struct["tokens"]
+    tok_spec = b_spec["tokens"]
+    args = (state["params"], tok_struct, state["caches"])
+    in_specs = (p_spec, tok_spec, c_spec)
+    out_specs = (None, c_spec)
+    return step, args, in_specs, out_specs

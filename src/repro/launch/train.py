@@ -1,0 +1,96 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \
+        --steps 50 --batch 8 --seq 256 --reduced
+
+On this CPU container ``--reduced`` trains the smoke-sized variant on the
+local mesh; on a real cluster the same driver with ``--mesh pod`` runs the
+full config on 256 chips (the dry-run proves it lowers).  Checkpoints via
+``repro.checkpoint``; data via the Markov pipeline.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the smoke-sized variant (CPU)")
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="width multiplier on the reduced config")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.checkpoint import latest_step, restore_checkpoint, \
+        save_checkpoint
+    from repro.configs import get_config
+    from repro.configs.base import ShapeConfig
+    from repro.data import DataConfig, TokenPipeline
+    from repro.launch.steps import make_train_step
+    from repro.models import init_params
+    from repro.optim import AdamWConfig, adamw_init
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+        if args.scale != 1.0:
+            cfg = dataclasses.replace(
+                cfg,
+                d_model=int(cfg.d_model * args.scale) // 16 * 16,
+                d_ff=int(cfg.d_ff * args.scale) // 16 * 16 if cfg.d_ff else 0)
+    shape = ShapeConfig("cli_train", args.seq, args.batch, "train")
+
+    params = init_params(jax.random.PRNGKey(args.seed), cfg)
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
+          f"batch={args.batch} seq={args.seq}")
+
+    opt_cfg = AdamWConfig(lr=args.lr)
+    opt_state = adamw_init(params)
+    step0 = 0
+    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        step0 = latest_step(args.ckpt_dir)
+        params = restore_checkpoint(args.ckpt_dir, params, step0)
+        print(f"restored params at step {step0}")
+
+    train_step = jax.jit(make_train_step(cfg, opt_cfg,
+                                         total_steps=args.steps))
+    pipe = TokenPipeline(cfg, shape, DataConfig(seed=args.seed),
+                         batch_override=args.batch)
+
+    t0 = time.time()
+    for step in range(step0, args.steps):
+        batch = pipe.batch_at(step)
+        params, opt_state, metrics = train_step(params, opt_state, batch)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            loss = float(metrics["loss"])
+            print(f"step {step:5d} loss {loss:8.4f} "
+                  f"ce {float(metrics['ce']):8.4f} "
+                  f"gnorm {float(metrics['grad_norm']):7.3f} "
+                  f"({(time.time()-t0):6.1f}s)", flush=True)
+        if args.ckpt_dir and args.ckpt_every and \
+                step > 0 and step % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, step, params)
+    if args.ckpt_dir:
+        save_checkpoint(args.ckpt_dir, args.steps, params)
+        print(f"final checkpoint at step {args.steps}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,11 @@
+"""Model zoo: one decoder substrate covering all assigned families."""
+from repro.models.inputs import batch_shapes, input_specs, make_batch
+from repro.models.transformer import (Caches, decode_step, forward,
+                                      init_caches, init_params, lm_logits,
+                                      loss_fn, prefill)
+
+__all__ = [
+    "Caches", "batch_shapes", "decode_step", "forward", "init_caches",
+    "init_params", "input_specs", "lm_logits", "loss_fn", "make_batch",
+    "prefill",
+]

@@ -1,0 +1,291 @@
+"""Attention variants: GQA/MQA (+qk-norm, softcap, sliding window) and
+DeepSeek MLA (multi-head latent attention with compressed KV cache).
+
+Cache contract (decode):
+* GQA full cache     — k/v: (B, S, Hkv, Dh), plus scalar write position.
+* GQA ring cache     — same shape with S = window; positions wrap (the
+  sub-quadratic dense-arch path for long_500k).
+* MLA cache          — c_kv: (B, S, kv_rank) + k_rope: (B, S, rope_dim);
+  the cache stores the *compressed* latent (the paper's memory win).
+
+All attention math runs through ``repro.kernels.ops.flash_attention``
+(impl-switchable: jnp oracle on CPU, Pallas on TPU) except MLA decode,
+which uses the absorbed-matmul formulation (no per-step K/V expansion).
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops
+from repro.models.layers import apply_rope, dense_init, rmsnorm, rmsnorm_init
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def gqa_init(key: jax.Array, cfg: ArchConfig, dtype) -> Dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, cfg.n_heads * hd), dtype),
+        "wk": dense_init(ks[1], (d, cfg.n_kv_heads * hd), dtype),
+        "wv": dense_init(ks[2], (d, cfg.n_kv_heads * hd), dtype),
+        "wo": dense_init(ks[3], (cfg.n_heads * hd, d), dtype, in_axis=1),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+class KVCache(NamedTuple):
+    k: jax.Array            # (B, S, Hkv, Dh)
+    v: jax.Array            # (B, S, Hkv, Dh)
+    pos: jax.Array          # (B,) i32 — next absolute position per sequence
+                            # (per-sequence so continuous batching can mix
+                            # requests at different depths in one step)
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, cache_len: int,
+                  dtype) -> KVCache:
+    hd = cfg.resolved_head_dim
+    shape = (batch, cache_len, cfg.n_kv_heads, hd)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   pos=jnp.zeros((batch,), jnp.int32))
+
+
+def _project_qkv(p: Dict, cfg: ArchConfig, x: jax.Array,
+                 positions: jax.Array):
+    b, l, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(b, l, cfg.n_heads, hd)
+    k = (x @ p["wk"]).reshape(b, l, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(b, l, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    sections = cfg.mrope_sections if cfg.mrope else None
+    q = apply_rope(q, positions, cfg.rope_theta, sections)
+    k = apply_rope(k, positions, cfg.rope_theta, sections)
+    return q, k, v
+
+
+def gqa_forward(p: Dict, cfg: ArchConfig, x: jax.Array,
+                positions: jax.Array, *, window: int = 0,
+                impl: str = "xla") -> jax.Array:
+    """Full-sequence causal attention (train / prefill)."""
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    # kernels expect (B, H, L, D)
+    out = ops.flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=True, window=window, impl=impl)
+    b, l, _ = x.shape
+    out = out.transpose(0, 2, 1, 3).reshape(b, l, -1)
+    return out @ p["wo"]
+
+
+def gqa_decode(p: Dict, cfg: ArchConfig, x: jax.Array, cache: KVCache, *,
+               ring: bool = False, window: int = 0, impl: str = "xla"
+               ) -> Tuple[jax.Array, KVCache]:
+    """One-token decode against the KV cache.  x: (B, 1, d).
+
+    ``ring=True`` treats the cache as a sliding-window ring buffer of
+    size S (writes wrap) — the long_500k dense-arch path."""
+    b = x.shape[0]
+    s = cache.k.shape[1]
+    pos = cache.pos                                      # (B,) absolute
+    positions = pos[:, None]                             # (B, 1)
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions)
+    slot = pos % s if ring else jnp.minimum(pos, s - 1)  # (B,)
+    rows = jnp.arange(b)
+    k = cache.k.at[rows, slot].set(k_new[:, 0].astype(cache.k.dtype))
+    v = cache.v.at[rows, slot].set(v_new[:, 0].astype(cache.v.dtype))
+    # Validity per sequence: absolute key positions; ring buffers hold the
+    # last S.
+    idx = jnp.arange(s)[None, :]                         # (1, S)
+    if ring:
+        # slot i holds absolute position pos − ((slot − i) mod S)
+        age = (slot[:, None] - idx) % s
+        k_abs = pos[:, None] - age
+        valid = (k_abs >= 0) & (k_abs >= pos[:, None] - s + 1)
+    else:
+        valid = idx <= pos[:, None]
+        if window:
+            valid &= idx > pos[:, None] - window         # (B, S)
+    # Masked attention over the cache (one query per sequence).  Grouped
+    # einsum keeps KV heads un-repeated (no (B,Hq,S,Dh) materialization).
+    hd = cfg.resolved_head_dim
+    group = cfg.n_heads // cfg.n_kv_heads
+    qg = q[:, 0].reshape(b, cfg.n_kv_heads, group, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)                           # (B, S, Hkv, Dh)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bngd,bsnd->bngs", qg, kf) / jnp.sqrt(
+        jnp.asarray(hd, jnp.float32))
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bngs,bsnd->bngd", probs, vf).astype(x.dtype)
+    out = out.reshape(b, 1, cfg.n_heads * hd)
+    out = out @ p["wo"]
+    return out, cache._replace(k=k, v=v, pos=pos + 1)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3, arXiv:2412.19437)
+# ---------------------------------------------------------------------------
+
+def mla_init(key: jax.Array, cfg: ArchConfig, dtype) -> Dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 7)
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        # query low-rank path
+        "wq_a": dense_init(ks[0], (d, m.q_lora_rank), dtype),
+        "q_a_norm": rmsnorm_init(m.q_lora_rank, dtype),
+        "wq_b": dense_init(ks[1], (m.q_lora_rank, h * qk_head), dtype),
+        # joint KV compression + decoupled rope key
+        "wkv_a": dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim),
+                            dtype),
+        "kv_a_norm": rmsnorm_init(m.kv_lora_rank, dtype),
+        "wk_b": dense_init(ks[3], (m.kv_lora_rank, h * m.qk_nope_head_dim),
+                           dtype),
+        "wv_b": dense_init(ks[4], (m.kv_lora_rank, h * m.v_head_dim), dtype),
+        "wo": dense_init(ks[5], (h * m.v_head_dim, d), dtype, in_axis=1),
+    }
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array         # (B, S, kv_rank) — compressed latent
+    k_rope: jax.Array       # (B, S, rope_dim)
+    pos: jax.Array          # (B,) i32 — per-sequence write position
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, cache_len: int,
+                   dtype) -> MLACache:
+    m = cfg.mla
+    return MLACache(
+        c_kv=jnp.zeros((batch, cache_len, m.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, cache_len, m.qk_rope_head_dim), dtype),
+        pos=jnp.zeros((batch,), jnp.int32))
+
+
+def _mla_qc(p: Dict, cfg: ArchConfig, x: jax.Array, positions: jax.Array):
+    """Shared query + compressed-KV projections."""
+    m = cfg.mla
+    b, l, _ = x.shape
+    h = cfg.n_heads
+    q = rmsnorm(p["q_a_norm"], x @ p["wq_a"], cfg.norm_eps) @ p["wq_b"]
+    q = q.reshape(b, l, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    kv_a = x @ p["wkv_a"]
+    c_kv, k_rope = jnp.split(kv_a, [m.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(p["kv_a_norm"], c_kv, cfg.norm_eps)
+    # decoupled rope key is shared across heads (1 kv head for the rope part)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_forward(p: Dict, cfg: ArchConfig, x: jax.Array,
+                positions: jax.Array, *, impl: str = "xla") -> jax.Array:
+    """Train/prefill MLA: expand K/V from the latent, flash-attend."""
+    m = cfg.mla
+    b, l, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope, c_kv, k_rope = _mla_qc(p, cfg, x, positions)
+    k_nope = (c_kv @ p["wk_b"]).reshape(b, l, h, m.qk_nope_head_dim)
+    v = (c_kv @ p["wv_b"]).reshape(b, l, h, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (b, l, h, m.qk_rope_head_dim))], axis=-1)
+    # pad V up to the QK head dim so one flash call serves both
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qk_head - m.v_head_dim)))
+    out = ops.flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v_pad.transpose(0, 2, 1, 3), causal=True, impl=impl)
+    out = out.transpose(0, 2, 1, 3)[..., :m.v_head_dim].reshape(b, l, -1)
+    return out @ p["wo"]
+
+
+# §Perf switch: REPRO_MLA_ABSORBED=0 selects the naive per-step K/V
+# expansion baseline (recorded separately in EXPERIMENTS.md §Perf).
+_ABSORBED_DEFAULT = os.environ.get("REPRO_MLA_ABSORBED", "1") != "0"
+
+
+def mla_decode(p: Dict, cfg: ArchConfig, x: jax.Array, cache: MLACache, *,
+               absorbed: bool | None = None, ring: bool = False
+               ) -> Tuple[jax.Array, MLACache]:
+    """One-token MLA decode on the compressed cache.
+
+    ``absorbed=True`` (the §Perf variant) absorbs wk_b into the query and
+    wv_b into the output projection, so attention runs directly in the
+    kv_rank latent space — per-step FLOPs drop from O(S·h·(d_nope+d_v)) KV
+    expansion to O(S·(rank+rope)).  ``absorbed=False`` is the naive
+    baseline that expands K/V every step (recorded separately in §Perf).
+    """
+    if absorbed is None:
+        absorbed = _ABSORBED_DEFAULT
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.n_heads
+    s = cache.c_kv.shape[1]
+    pos = cache.pos                                      # (B,)
+    positions = pos[:, None]
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qc(p, cfg, x, positions)
+    slot = pos % s if ring else jnp.minimum(pos, s - 1)  # (B,)
+    rows = jnp.arange(b)
+    c_kv = cache.c_kv.at[rows, slot].set(
+        c_kv_new[:, 0].astype(cache.c_kv.dtype))
+    k_rope = cache.k_rope.at[rows, slot].set(
+        k_rope_new[:, 0].astype(cache.k_rope.dtype))
+    idx = jnp.arange(s)[None, :]
+    if ring:
+        k_abs = pos[:, None] - ((slot[:, None] - idx) % s)
+        valid = (k_abs >= 0) & (k_abs >= pos[:, None] - s + 1)
+    else:
+        valid = idx <= pos[:, None]                      # (B, S)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(
+        m.qk_nope_head_dim + m.qk_rope_head_dim, jnp.float32))
+
+    if absorbed:
+        # q_lat[h] = q_nope[h] @ wk_b[h]ᵀ  — (B, h, rank)
+        wk_b = p["wk_b"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+        q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                           wk_b.astype(jnp.float32))
+        logits = (jnp.einsum("bhr,bsr->bhs", q_lat,
+                             c_kv.astype(jnp.float32))
+                  + jnp.einsum("bhd,bsd->bhs",
+                               q_rope[:, 0].astype(jnp.float32),
+                               k_rope.astype(jnp.float32))) * scale
+        logits = jnp.where(valid[:, None, :], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        ctx_lat = jnp.einsum("bhs,bsr->bhr", probs,
+                             c_kv.astype(jnp.float32))   # (B, h, rank)
+        wv_b = p["wv_b"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+        out = jnp.einsum("bhr,rhd->bhd", ctx_lat, wv_b.astype(jnp.float32))
+    else:
+        k_nope = (c_kv @ p["wk_b"]).reshape(b, s, h, m.qk_nope_head_dim)
+        v = (c_kv @ p["wv_b"]).reshape(b, s, h, m.v_head_dim)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)[:, 0]     # (B, h, qk)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (b, s, h, m.qk_rope_head_dim))],
+            axis=-1)
+        logits = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        logits = jnp.where(valid[:, None, :], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhs,bshd->bhd", probs, v.astype(jnp.float32))
+
+    out = out.astype(x.dtype).reshape(b, 1, h * m.v_head_dim)
+    out = out @ p["wo"]
+    return out, MLACache(c_kv=c_kv, k_rope=k_rope, pos=pos + 1)

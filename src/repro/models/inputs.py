@@ -1,0 +1,84 @@
+"""Input specifications per (architecture × input shape × mode).
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no allocation) for the dry-run; ``make_batch`` materializes a
+random batch of the same structure for CPU smoke tests / examples.
+
+VLM/audio frontends are stubs per the brief: for VLMs, ``patch_embeds``
+are precomputed ViT patch embeddings of the right shape (frontend_frac of
+the sequence); for audio, the EnCodec token streams are the input ids.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+
+def batch_shapes(cfg: ArchConfig, shape: ShapeConfig,
+                 batch_override: int | None = None) -> Dict[str, tuple]:
+    b = batch_override if batch_override is not None else shape.global_batch
+    l = shape.seq_len
+    if shape.mode == "decode":
+        # serve_step consumes ONE new token; the cache carries seq_len.
+        if cfg.n_codebooks > 1:
+            return {"tokens": (b, cfg.n_codebooks, 1)}
+        return {"tokens": (b, 1)}
+    if cfg.family == "vlm":
+        lp = int(l * cfg.frontend_frac)
+        lt = l - lp
+        return {"tokens": (b, lt),
+                "patch_embeds": (b, lp, cfg.d_model),
+                "positions": (3, b, l)}
+    if cfg.n_codebooks > 1:
+        return {"tokens": (b, cfg.n_codebooks, l)}
+    return {"tokens": (b, l)}
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, *,
+                embed_dtype=jnp.bfloat16,
+                batch_override: int | None = None) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (dry-run path)."""
+    shapes = batch_shapes(cfg, shape, batch_override)
+    out = {}
+    for name, shp in shapes.items():
+        if name == "patch_embeds":
+            out[name] = jax.ShapeDtypeStruct(shp, embed_dtype)
+        elif name == "positions":
+            out[name] = jax.ShapeDtypeStruct(shp, jnp.int32)
+        else:
+            out[name] = jax.ShapeDtypeStruct(shp, jnp.int32)
+    return out
+
+
+def make_batch(key: jax.Array, cfg: ArchConfig, shape: ShapeConfig, *,
+               embed_dtype=jnp.float32,
+               batch_override: int | None = None) -> Dict[str, jax.Array]:
+    """Random concrete batch matching :func:`input_specs` (smoke tests)."""
+    shapes = batch_shapes(cfg, shape, batch_override)
+    ks = jax.random.split(key, len(shapes))
+    out = {}
+    for k, (name, shp) in zip(ks, shapes.items()):
+        if name == "patch_embeds":
+            out[name] = (jax.random.normal(k, shp) * 0.02).astype(embed_dtype)
+        elif name == "positions":
+            # text follows the vision patches; all three M-RoPE planes use
+            # the flat index for text, and a (t, h, w) grid for patches.
+            _, b, l = shp
+            lp = int(shape.seq_len * cfg.frontend_frac)
+            pos_text = jnp.arange(l)[None, None, :]
+            pos = jnp.broadcast_to(pos_text, (3, b, l)).astype(jnp.int32)
+            # patch grid: t constant, h/w raster over a square-ish grid
+            side = max(int(lp ** 0.5), 1)
+            hh = (jnp.arange(lp) // side)[None, :]
+            ww = (jnp.arange(lp) % side)[None, :]
+            pos = pos.at[1, :, :lp].set(jnp.broadcast_to(hh, (b, lp)))
+            pos = pos.at[2, :, :lp].set(jnp.broadcast_to(ww, (b, lp)))
+            out[name] = pos
+        else:
+            out[name] = jax.random.randint(k, shp, 0, cfg.vocab_size,
+                                           dtype=jnp.int32)
+    return out

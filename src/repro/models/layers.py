@@ -1,0 +1,126 @@
+"""Shared neural layers for the model zoo (pure-functional, pytree params).
+
+Conventions:
+* params are plain dicts of jnp arrays; layer-stacked params carry a leading
+  ``n_layers`` axis and are consumed by ``lax.scan``.
+* every init takes an explicit key and a ``param_dtype``；compute casts to
+  ``cfg`` compute dtype at the matmul boundary (mixed precision).
+* weight names follow a stable scheme the sharding rules regex against:
+  ``wq/wk/wv/wo`` (attention), ``wi_gate/wi_up/wo_mlp`` (MLP),
+  ``embed``, ``lm_head``, ``scale`` (norms).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key: jax.Array, shape: Tuple[int, ...], dtype,
+               in_axis: int = 0) -> jax.Array:
+    """Truncated-normal fan-in init (MaxText-style)."""
+    fan_in = shape[in_axis]
+    std = 1.0 / jnp.sqrt(jnp.asarray(fan_in, jnp.float32))
+    w = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std
+    return w.astype(dtype)
+
+
+def embed_init(key: jax.Array, vocab: int, d: int, dtype) -> jax.Array:
+    # std 1/sqrt(d): keeps tied-embedding logits O(1); embed_scale configs
+    # (gemma) multiply activations back up by sqrt(d).
+    w = jax.random.normal(key, (vocab, d), jnp.float32) * (d ** -0.5)
+    return w.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> Dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (+ M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies (head_dim/2,)."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               mrope_sections: Optional[Tuple[int, ...]] = None) -> jax.Array:
+    """Rotary embedding.
+
+    x: (B, L, H, D); positions: (B, L) — or (3, B, L) for M-RoPE, where the
+    three leading planes are the temporal/height/width position components
+    and ``mrope_sections`` splits the D/2 frequency slots among them
+    (Qwen2-VL, arXiv:2409.12191).
+    """
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                       # (d/2,)
+    if positions.ndim == 3:
+        assert mrope_sections is not None
+        n_planes = positions.shape[0]
+        # frequency slot i draws its position from plane sec_of[i]
+        sec_of = jnp.concatenate([
+            jnp.full((s,), i, jnp.int32)
+            for i, s in enumerate(mrope_sections)])   # (d/2,)
+        pos = positions.astype(jnp.float32)           # (S, B, L)
+        per_plane = pos[..., None] * inv[None, None, None, :]  # (S,B,L,d/2)
+        plane_sel = jax.nn.one_hot(sec_of, n_planes, axis=0,
+                                   dtype=jnp.float32)          # (S, d/2)
+        angles = jnp.einsum("sbld,sd->bld", per_plane, plane_sel)
+    else:
+        angles = positions.astype(jnp.float32)[..., None] * inv  # (B, L, d/2)
+    sin = jnp.sin(angles)[:, :, None, :]             # (B, L, 1, d/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x32, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key: jax.Array, d: int, d_ff: int, dtype) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": dense_init(k1, (d, d_ff), dtype),
+        "wi_up": dense_init(k2, (d, d_ff), dtype),
+        "wo_mlp": dense_init(k3, (d_ff, d), dtype),
+    }
+
+
+def mlp(p: Dict, x: jax.Array, activation: str = "silu") -> jax.Array:
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[activation]
+    gate = act(x @ p["wi_gate"])
+    return (gate * (x @ p["wi_up"])) @ p["wo_mlp"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def softcap(logits: jax.Array, cap: float) -> jax.Array:
+    if cap and cap > 0:
+        return jnp.tanh(logits / cap) * cap
+    return logits

@@ -1,0 +1,170 @@
+"""Mixture-of-Experts layer with capacity-bounded ragged dispatch and
+STRADS-style dynamic expert load balancing.
+
+Dispatch (sort-based, SPMD-friendly):
+    router logits → top-k experts/token → flatten (T·k assignments) →
+    argsort by expert id → position-within-expert via exclusive-prefix
+    offsets → capacity-clipped scatter into (E, C, D) buffers → batched
+    expert GEMM → weighted gather-combine.
+
+Load balancing (the paper's step-3 insight inside a modern arch —
+DESIGN.md §5): expert selection is exactly the paper's block-dispatch
+problem; observed per-expert load feeds
+:func:`repro.core.balance.bias_balance_update`, which nudges a routing
+bias against hot experts.  ``router_balance``:
+    "aux_loss"    — standard Switch/OLMoE auxiliary loss (baseline)
+    "strads_bias" — bias-based dynamic balancing (SAP step 3/4 transfer;
+                    cf. DeepSeek-V3 aux-free balancing)
+    "none"        — unbalanced
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init
+
+
+def moe_init(key: jax.Array, cfg: ArchConfig, dtype) -> Dict:
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.d_ff_expert, m.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, e), jnp.float32),
+        "balance_bias": jnp.zeros((e,), jnp.float32),
+        # batched expert weights (E, ...) — shard E over the model axis
+        "we_gate": dense_init(ks[1], (e, d, f), dtype, in_axis=1),
+        "we_up": dense_init(ks[2], (e, d, f), dtype, in_axis=1),
+        "we_down": dense_init(ks[3], (e, f, d), dtype, in_axis=1),
+    }
+    if m.n_shared_experts:
+        fs = m.n_shared_experts * f
+        kss = jax.random.split(ks[4], 3)
+        p["ws_gate"] = dense_init(kss[0], (d, fs), dtype)
+        p["ws_up"] = dense_init(kss[1], (d, fs), dtype)
+        p["ws_down"] = dense_init(kss[2], (fs, d), dtype)
+    return p
+
+
+class MoEStats(NamedTuple):
+    """Per-layer routing telemetry (drives STRADS balancing + aux loss)."""
+
+    load: jax.Array         # (E,) tokens routed to each expert (pre-drop)
+    importance: jax.Array   # (E,) summed router probability
+    aux_loss: jax.Array     # () load-balance auxiliary loss
+    dropped: jax.Array      # () fraction of assignments over capacity
+
+
+def moe_forward(p: Dict, cfg: ArchConfig, x: jax.Array,
+                ) -> Tuple[jax.Array, MoEStats]:
+    """x: (B, L, D) → (B, L, D), plus routing stats.
+
+    Capacity C = ceil(T·k/E)·capacity_factor tokens per expert; overflow is
+    dropped (standard capacity dispatch) — STRADS balancing exists to keep
+    that drop near zero.
+    """
+    m = cfg.moe
+    b, l, d = x.shape
+    t = b * l
+    e = m.n_experts
+    xf = x.reshape(t, d)
+
+    # Shard-local two-stage dispatch (§Perf hillclimb 3): with a mesh
+    # active, tokens are grouped into S = |dp| shards that each dispatch
+    # with LOCAL capacity ceil(t_local·k/E)·cf.  The (S, E, C_local, D)
+    # buffer shards S over dp and E over model, so the per-device buffer
+    # shrinks by S× versus global-capacity dispatch.  Local capacity is
+    # only safe when expert load is balanced per shard — which is exactly
+    # what the STRADS bias balancer maintains (the paper's step-3 loop).
+    from repro.distributed.context import active_mesh, dp_axes
+    mesh = active_mesh()
+    n_shards = 1
+    if mesh is not None:
+        axes = dp_axes(mesh)
+        if axes:
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            if t % size == 0 and (t // size) >= m.experts_per_token:
+                n_shards = size
+
+    xs = xf.reshape(n_shards, t // n_shards, d)
+    y_s, stats_s = jax.vmap(
+        lambda xl: _dispatch_local(p, cfg, xl))(xs)
+    y = y_s.reshape(t, d)
+
+    # ---- shared experts (DeepSeek) ----
+    if m.n_shared_experts:
+        act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[cfg.activation]
+        hs = act(xf @ p["ws_gate"]) * (xf @ p["ws_up"])
+        y = y + hs @ p["ws_down"]
+
+    stats = MoEStats(load=stats_s.load.sum(0),
+                     importance=stats_s.importance.sum(0),
+                     aux_loss=stats_s.aux_loss.mean(),
+                     dropped=stats_s.dropped.mean())
+    return y.reshape(b, l, d), stats
+
+
+def _dispatch_local(p: Dict, cfg: ArchConfig, xf: jax.Array
+                    ) -> Tuple[jax.Array, MoEStats]:
+    """Route + capacity-dispatch + expert GEMM + combine for one token
+    shard.  xf: (T_local, D)."""
+    m = cfg.moe
+    t, d = xf.shape
+    e, k = m.n_experts, m.experts_per_token
+
+    # ---- routing ----
+    logits = xf.astype(jnp.float32) @ p["router"]         # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # selection uses the balance bias; combine weights use raw probs
+    # (bias steers *placement* only — DeepSeek-V3 semantics).
+    sel_scores = logits + p["balance_bias"][None, :]
+    _, sel = jax.lax.top_k(sel_scores, k)                 # (T, k)
+    gates = jnp.take_along_axis(probs, sel, axis=-1)      # (T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # ---- stats ----
+    load = jnp.zeros((e,), jnp.float32).at[sel.reshape(-1)].add(1.0)
+    importance = probs.sum(0)
+    # Switch-style aux loss: E · Σ_e f_e · P_e
+    f_e = load / jnp.maximum(load.sum(), 1.0)
+    p_e = importance / jnp.maximum(importance.sum(), 1.0)
+    aux = e * jnp.sum(f_e * p_e)
+
+    # ---- ragged sort-based dispatch ----
+    capacity = int(max(1, round((t * k / e) * m.capacity_factor)))
+    flat_e = sel.reshape(-1)                              # (T·k,)
+    order = jnp.argsort(flat_e)                           # stable
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=e)               # (E,)
+    starts = jnp.cumsum(counts) - counts                  # exclusive
+    pos_in_e = jnp.arange(t * k) - starts[sorted_e]       # (T·k,)
+    keep = pos_in_e < capacity
+    token_of = order // k                                 # source token
+    slot_of = jnp.where(keep, pos_in_e, 0)
+
+    buf = jnp.zeros((e, capacity, d), xf.dtype)
+    buf = buf.at[sorted_e, slot_of].add(
+        jnp.where(keep[:, None], xf[token_of], 0).astype(xf.dtype),
+        mode="drop")
+
+    # ---- batched expert GEMM ----
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[cfg.activation]
+    h = act(jnp.einsum("ecd,edf->ecf", buf, p["we_gate"])) * \
+        jnp.einsum("ecd,edf->ecf", buf, p["we_up"])
+    y_buf = jnp.einsum("ecf,efd->ecd", h, p["we_down"])   # (E, C, D)
+
+    # ---- combine ----
+    gate_flat = gates.reshape(-1)[order]
+    y_tok = y_buf[sorted_e, slot_of]                      # (T·k, D)
+    contrib = jnp.where(keep[:, None], y_tok * gate_flat[:, None], 0)
+    y = jnp.zeros((t, d), xf.dtype).at[token_of].add(
+        contrib.astype(xf.dtype), mode="drop")
+
+    dropped = 1.0 - keep.astype(jnp.float32).mean()
+    return y, MoEStats(load=load, importance=importance,
+                       aux_loss=aux, dropped=dropped)

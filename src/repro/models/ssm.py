@@ -1,0 +1,232 @@
+"""Mamba2 / SSD (state-space duality) mixer — arXiv:2405.21060.
+
+Chunked SSD form (DESIGN.md §6): the sequence is split into chunks of
+``chunk_size``; within a chunk the quadratic "attention-like" term runs on
+the MXU, and a sequential ``lax.scan`` over chunks carries the (H, P, N)
+state — O(L·Q) compute instead of O(L²), O(1)-state decode.
+
+Layer anatomy (faithful to the reference implementation):
+    in_proj → [z | x | B | C | dt] → causal depthwise conv on [x|B|C] →
+    SSD(x·dt, exp(dt·A), B, C) + D·x → gated RMSNorm(y)·silu(z) → out_proj
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# params / dims
+# ---------------------------------------------------------------------------
+
+def ssm_dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.n_groups * s.state_dim
+    return d_in, n_heads, conv_ch
+
+
+def ssm_init(key: jax.Array, cfg: ArchConfig, dtype) -> Dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, nh, conv_ch = ssm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_in + 2 * s.n_groups * s.state_dim + nh
+    dt = jnp.exp(jax.random.uniform(ks[2], (nh,), jnp.float32)
+                 * (jnp.log(s.dt_max) - jnp.log(s.dt_min)) + jnp.log(s.dt_min))
+    return {
+        "in_proj": dense_init(ks[0], (d, proj_out), dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_dim, conv_ch),
+                                     jnp.float32) /
+                   jnp.sqrt(float(s.conv_dim))).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": (jnp.log(jnp.expm1(dt))).astype(jnp.float32),
+        "norm_scale": jnp.ones((d_in,), dtype),
+        "out_proj": dense_init(ks[3], (d_in, d), dtype),
+    }
+
+
+class SSMCache(NamedTuple):
+    ssm_state: jax.Array    # (B, H, P, N)
+    conv_state: jax.Array   # (B, conv_dim − 1, conv_ch)
+    pos: jax.Array          # (B,) i32 — per-sequence position
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, dtype) -> SSMCache:
+    s = cfg.ssm
+    d_in, nh, conv_ch = ssm_dims(cfg)
+    return SSMCache(
+        ssm_state=jnp.zeros((batch, nh, s.head_dim, s.state_dim), jnp.float32),
+        conv_state=jnp.zeros((batch, s.conv_dim - 1, conv_ch), dtype),
+        pos=jnp.zeros((batch,), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# core SSD math
+# ---------------------------------------------------------------------------
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Lower-triangular pairwise cumulative sums: out[..., i, j] =
+    Σ_{j < m ≤ i} a[..., m] for i ≥ j, −inf above the diagonal."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(xdt: jax.Array, a: jax.Array, B: jax.Array, C: jax.Array,
+                chunk: int, h0: jax.Array | None = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    xdt: (B, L, H, P)  — dt-scaled inputs
+    a:   (B, L, H)     — per-step log decays (dt·A, A < 0)
+    B,C: (B, L, G, N)  — input/output projections (G groups share heads)
+    Returns (y (B,L,H,P), final_state (B,H,P,N)).
+    """
+    b, l, h, p = xdt.shape
+    g, n = B.shape[2], B.shape[3]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    rep = h // g
+
+    # reshape into chunks
+    xc = xdt.reshape(b, nc, chunk, h, p)
+    ac = a.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, g, n)
+    Cc = C.reshape(b, nc, chunk, g, n)
+    # head h uses group h // rep
+    Bh = jnp.repeat(Bc, rep, axis=3)                 # (B,NC,Q,H,N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    a_cum = jnp.cumsum(ac, axis=2)                   # (B,NC,Q,H)
+    # intra-chunk quadratic term
+    Lmat = jnp.exp(_segsum(ac.transpose(0, 1, 3, 2)))  # (B,NC,H,Q,Q)
+    scores = jnp.einsum("bcihn,bcjhn->bchij", Ch, Bh)  # (B,NC,H,Q,Q)
+    y_diag = jnp.einsum("bchij,bchij,bcjhp->bcihp",
+                        scores, Lmat, xc)
+
+    # per-chunk end states
+    decay_to_end = jnp.exp(a_cum[:, :, -1:, :] - a_cum)   # (B,NC,Q,H)
+    states = jnp.einsum("bcjhn,bcjh,bcjhp->bchpn",
+                        Bh, decay_to_end, xc)             # (B,NC,H,P,N)
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])             # (B,NC,H)
+
+    # inter-chunk recurrence
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), xdt.dtype)
+
+    def step(carry, inp):
+        s_c, dec = inp                                   # (B,H,P,N),(B,H)
+        new = carry * dec[:, :, None, None] + s_c
+        return new, carry                                # emit state *before*
+
+    hT, h_prev = jax.lax.scan(
+        step, h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)             # (B,NC,H,P,N)
+
+    # inter-chunk contribution
+    in_decay = jnp.exp(a_cum)                            # (B,NC,Q,H)
+    y_off = jnp.einsum("bcihn,bcih,bchpn->bcihp", Ch, in_decay, h_prev)
+
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, hT
+
+
+# ---------------------------------------------------------------------------
+# full mixer (train/prefill + decode)
+# ---------------------------------------------------------------------------
+
+def _split_proj(cfg: ArchConfig, zxbcdt: jax.Array):
+    s = cfg.ssm
+    d_in, nh, _ = ssm_dims(cfg)
+    gn = s.n_groups * s.state_dim
+    z, x, Bf, Cf, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + gn, 2 * d_in + 2 * gn], axis=-1)
+    return z, x, Bf, Cf, dt
+
+
+def _causal_conv(p: Dict, u: jax.Array) -> jax.Array:
+    """Depthwise causal conv, width conv_dim.  u: (B, L, CH)."""
+    w = p["conv_w"].astype(u.dtype)                      # (W, CH)
+    width = w.shape[0]
+    upad = jnp.pad(u, ((0, 0), (width - 1, 0), (0, 0)))
+    # stack shifted views: Σ_w u[t-(W-1)+w] * w[w]
+    out = jnp.zeros_like(u)
+    for i in range(width):
+        out = out + upad[:, i:i + u.shape[1], :] * w[i]
+    return jax.nn.silu(out + p["conv_b"].astype(u.dtype))
+
+
+def ssm_forward(p: Dict, cfg: ArchConfig, x_in: jax.Array,
+                h0: jax.Array | None = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence Mamba2 mixer.  x_in: (B, L, d_model).
+
+    Returns (out (B, L, d_model), final ssm state)."""
+    s = cfg.ssm
+    b, l, _ = x_in.shape
+    d_in, nh, conv_ch = ssm_dims(cfg)
+    zxbcdt = x_in @ p["in_proj"]
+    z, xr, Bf, Cf, dt_raw = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xr, Bf, Cf], axis=-1)
+    conv_out = _causal_conv(p, conv_in)
+    xr, Bf, Cf = jnp.split(conv_out, [d_in, d_in + s.n_groups * s.state_dim],
+                           axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,L,H)
+    A = -jnp.exp(p["A_log"])                                         # (H,)
+    xh = xr.reshape(b, l, nh, s.head_dim).astype(jnp.float32)
+    Bm = Bf.reshape(b, l, s.n_groups, s.state_dim).astype(jnp.float32)
+    Cm = Cf.reshape(b, l, s.n_groups, s.state_dim).astype(jnp.float32)
+    y, hT = ssd_chunked(xh * dt[..., None], dt * A, Bm, Cm,
+                        min(s.chunk_size, l), h0)
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(b, l, d_in).astype(x_in.dtype)
+    # gated norm: RMSNorm(y · silu(z))
+    y = rmsnorm({"scale": p["norm_scale"]}, y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ p["out_proj"], hT
+
+
+def ssm_decode(p: Dict, cfg: ArchConfig, x_in: jax.Array, cache: SSMCache
+               ) -> Tuple[jax.Array, SSMCache]:
+    """One-token recurrent step.  x_in: (B, 1, d_model)."""
+    s = cfg.ssm
+    b = x_in.shape[0]
+    d_in, nh, conv_ch = ssm_dims(cfg)
+    zxbcdt = x_in[:, 0] @ p["in_proj"]                   # (B, proj)
+    z, xr, Bf, Cf, dt_raw = _split_proj(cfg, zxbcdt)
+    # conv over the rolling window
+    conv_in = jnp.concatenate([xr, Bf, Cf], axis=-1)     # (B, CH)
+    window = jnp.concatenate([cache.conv_state,
+                              conv_in[:, None, :]], axis=1)  # (B, W, CH)
+    w = p["conv_w"].astype(window.dtype)
+    conv_out = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, w)
+                           + p["conv_b"].astype(window.dtype))
+    xr, Bf, Cf = jnp.split(conv_out, [d_in, d_in + s.n_groups * s.state_dim],
+                           axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    xh = xr.reshape(b, nh, s.head_dim).astype(jnp.float32)
+    rep = nh // s.n_groups
+    Bm = jnp.repeat(Bf.reshape(b, s.n_groups, s.state_dim), rep, axis=1)
+    Cm = jnp.repeat(Cf.reshape(b, s.n_groups, s.state_dim), rep, axis=1)
+    decay = jnp.exp(dt * A)                              # (B, H)
+    h_new = (cache.ssm_state * decay[:, :, None, None] +
+             jnp.einsum("bh,bhp,bhn->bhpn", dt, xh, Bm))
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, Cm) + p["D"][None, :, None] * xh
+    y = y.reshape(b, d_in).astype(x_in.dtype)
+    y = rmsnorm({"scale": p["norm_scale"]}, y * jax.nn.silu(z), cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, SSMCache(ssm_state=h_new,
+                         conv_state=window[:, 1:, :],
+                         pos=cache.pos + 1)

@@ -1,0 +1,700 @@
+"""The decoder-only model zoo: one parameterized stack covering all six
+assigned families (dense / moe / ssm / hybrid / vlm / audio).
+
+Execution model:
+* homogeneous layers are **stacked** (leading ``n_layers`` axis) and driven
+  by ``lax.scan`` — bounded HLO size for the 512-device dry-run, with
+  ``jax.checkpoint`` on the body for training remat (DESIGN.md §6).
+* three entry points per architecture:
+    - ``loss_fn(params, batch)``            (train_4k)
+    - ``prefill(params, batch)``            (prefill_32k; emits caches)
+    - ``decode_step(params, token, caches)``(decode_32k / long_500k)
+* caches are stacked pytrees matching the layer stacks.
+
+Family specifics:
+    dense   — GQA blocks (llama3/qwen3/gemma/mistral); gemma = GeGLU +
+              embed-scale + MQA + head_dim 256 + tied embeddings.
+    moe     — olmoe: GQA + 64-expert top-8 MoE; deepseek-v3: MLA + shared
+              +routed experts, first 3 layers dense, optional MTP head.
+    ssm     — mamba2: pure SSD blocks (no MLP, no attention).
+    hybrid  — zamba2: SSD blocks + one *shared* attention+MLP block applied
+              every ``attn_every`` layers (scan-invariant captures).
+    vlm     — qwen2-vl: dense GQA backbone + M-RoPE; consumes precomputed
+              patch embeddings (frontend stub) interleaved with text.
+    audio   — musicgen: K codebook embeddings summed in, K heads out.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as A
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.layers import (dense_init, embed_init, mlp, mlp_init,
+                                 rmsnorm, rmsnorm_init, softcap)
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def _dense_block_init(key, cfg: ArchConfig, dtype) -> Dict:
+    k1, k2 = jax.random.split(key)
+    attn = (A.mla_init(k1, cfg, dtype) if cfg.mla is not None
+            else A.gqa_init(k1, cfg, dtype))
+    return {"ln1": rmsnorm_init(cfg.d_model, dtype), "attn": attn,
+            "ln2": rmsnorm_init(cfg.d_model, dtype),
+            "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, dtype)}
+
+
+def _moe_block_init(key, cfg: ArchConfig, dtype) -> Dict:
+    k1, k2 = jax.random.split(key)
+    attn = (A.mla_init(k1, cfg, dtype) if cfg.mla is not None
+            else A.gqa_init(k1, cfg, dtype))
+    return {"ln1": rmsnorm_init(cfg.d_model, dtype), "attn": attn,
+            "ln2": rmsnorm_init(cfg.d_model, dtype),
+            "moe": MOE.moe_init(k2, cfg, dtype)}
+
+
+def _ssm_block_init(key, cfg: ArchConfig, dtype) -> Dict:
+    return {"ln1": rmsnorm_init(cfg.d_model, dtype),
+            "ssm": SSM.ssm_init(key, cfg, dtype)}
+
+
+def _stack_init(block_init, key, n: int, cfg, dtype):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: block_init(k, cfg, dtype))(keys)
+
+
+def init_params(key: jax.Array, cfg: ArchConfig,
+                param_dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    vp = cfg.padded_vocab
+    params: Dict[str, Any] = {
+        "embed": embed_init(ks[0], vp * cfg.n_codebooks, d, param_dtype),
+        "final_norm": rmsnorm_init(d, param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(
+            ks[1], (d, vp * cfg.n_codebooks), param_dtype)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm", "audio"):
+        params["layers"] = _stack_init(_dense_block_init, ks[2],
+                                       cfg.n_layers, cfg, param_dtype)
+    elif fam == "moe":
+        if cfg.first_k_dense:
+            params["dense_layers"] = _stack_init(
+                _dense_block_init, ks[3], cfg.first_k_dense, cfg, param_dtype)
+        params["layers"] = _stack_init(
+            _moe_block_init, ks[2], cfg.n_layers - cfg.first_k_dense, cfg,
+            param_dtype)
+        if cfg.mtp_depth:
+            k_m1, k_m2 = jax.random.split(ks[5])
+            params["mtp"] = {
+                "proj": dense_init(k_m1, (2 * d, d), param_dtype),
+                "block": _dense_block_init(k_m2, cfg, param_dtype),
+                "norm_h": rmsnorm_init(d, param_dtype),
+                "norm_e": rmsnorm_init(d, param_dtype),
+            }
+    elif fam == "ssm":
+        params["layers"] = _stack_init(_ssm_block_init, ks[2],
+                                       cfg.n_layers, cfg, param_dtype)
+    elif fam == "hybrid":
+        params["layers"] = _stack_init(_ssm_block_init, ks[2],
+                                       cfg.n_layers, cfg, param_dtype)
+        params["shared_attn"] = _dense_block_init(ks[4], cfg, param_dtype)
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+    return params
+
+
+# ---------------------------------------------------------------------------
+# blocks (single-layer apply; driven by scan)
+# ---------------------------------------------------------------------------
+
+def _constrain_residual(x):
+    """Pin the residual stream to batch-sharded/D-replicated.
+
+    Without this, XLA's SPMD partitioner may reshard activations to match
+    the FSDP (data-sharded) weight layout — replicating the batch and
+    all-reducing a (B, L, D/model) f32 tensor at EVERY layer boundary
+    (observed: 2.27 TB/device of all-reduce on mistral prefill_32k).
+    Pinning (dp, None, None) forces the cheap alternative: weights are
+    all-gathered per layer (FSDP semantics), activations stay put.
+    See EXPERIMENTS.md §Perf iteration 2."""
+    from repro.distributed.context import constrain
+    return constrain(x, "dp", None, None)
+
+
+def _dense_block(p, cfg: ArchConfig, x, positions, *, window=0, impl="xla"):
+    x = _constrain_residual(x)
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.mla is not None:
+        h = A.mla_forward(p["attn"], cfg, h, positions, impl=impl)
+    else:
+        h = A.gqa_forward(p["attn"], cfg, h, positions, window=window,
+                          impl=impl)
+    x = x + h
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return _constrain_residual(x + mlp(p["mlp"], h, cfg.activation))
+
+
+def _moe_block(p, cfg: ArchConfig, x, positions, *, impl="xla"):
+    x = _constrain_residual(x)
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.mla is not None:
+        h = A.mla_forward(p["attn"], cfg, h, positions, impl=impl)
+    else:
+        h = A.gqa_forward(p["attn"], cfg, h, positions, impl=impl)
+    x = x + h
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    y, stats = MOE.moe_forward(p["moe"], cfg, h)
+    return _constrain_residual(x + y), stats
+
+
+def _ssm_block(p, cfg: ArchConfig, x, h0=None):
+    x = _constrain_residual(x)
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    y, hT = SSM.ssm_forward(p["ssm"], cfg, h, h0)
+    return _constrain_residual(x + y), hT
+
+
+# ---------------------------------------------------------------------------
+# embedding / head helpers
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, cfg: ArchConfig, tokens: jax.Array) -> jax.Array:
+    """tokens: (B, L) — or (B, K, L) for multi-codebook audio."""
+    emb = params["embed"]
+    if cfg.n_codebooks > 1:
+        b, k, l = tokens.shape
+        # codebook k uses vocab slice [k·Vp, (k+1)·Vp)
+        offset = (jnp.arange(cfg.n_codebooks)
+                  * cfg.padded_vocab)[None, :, None]
+        x = emb[(tokens + offset).reshape(b, -1)].reshape(b, k, l, -1)
+        x = x.sum(axis=1)                         # summed codebook embeds
+    else:
+        x = emb[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.sqrt(jnp.asarray(cfg.d_model, jnp.float32)).astype(x.dtype)
+    return x
+
+
+def lm_logits(params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """x: (B, L, D) → (B, L, Vp) — or (B, K, L, Vp) for audio.
+
+    The vocab axis is padded (cfg.padded_vocab) for mesh divisibility;
+    padded columns are masked to −1e30, so CE / sampling are unaffected."""
+    from repro.distributed.context import constrain
+    if cfg.tie_embeddings:
+        w = params["embed"].T
+    else:
+        w = params["lm_head"]
+    logits = x @ w                                 # (B, L, K·Vp)
+    logits = constrain(logits, "dp", None, "model")
+    vp = cfg.padded_vocab
+    if cfg.n_codebooks > 1:
+        b, l, _ = logits.shape
+        logits = logits.reshape(b, l, cfg.n_codebooks, vp)
+        logits = logits.transpose(0, 2, 1, 3)      # (B, K, L, Vp)
+    if cfg.attn_logit_softcap:
+        logits = softcap(logits, cfg.attn_logit_softcap)
+    if vp != cfg.vocab_size:
+        pad_mask = jnp.arange(vp) < cfg.vocab_size
+        logits = jnp.where(pad_mask, logits, -1e30)
+    return logits
+
+
+def _positions_for(cfg: ArchConfig, batch: Dict, b: int, l: int):
+    if cfg.mrope and "positions" in batch:
+        return batch["positions"]                  # (3, B, L)
+    return jnp.broadcast_to(jnp.arange(l)[None, :], (b, l))
+
+
+def _backbone_inputs(params, cfg: ArchConfig, batch: Dict):
+    """Embed the batch (family-aware).  Returns (x, positions, labels)."""
+    tokens = batch["tokens"]
+    if cfg.family == "vlm":
+        # frontend stub: precomputed patch embeddings prepended to text
+        patch = batch["patch_embeds"].astype(params["embed"].dtype)
+        text = embed_tokens(params, cfg, tokens)   # (B, Lt, D)
+        x = jnp.concatenate([patch, text], axis=1)
+        b, l, _ = x.shape
+        positions = _positions_for(cfg, batch, b, l)
+        # loss only on text positions; labels padded with ignore (-1) for
+        # the patch prefix
+        labels = jnp.concatenate(
+            [jnp.full((b, patch.shape[1]), -1, tokens.dtype), tokens],
+            axis=1)
+        return x, positions, labels
+    x = embed_tokens(params, cfg, tokens)
+    b, l = x.shape[0], x.shape[1]
+    return x, _positions_for(cfg, batch, b, l), tokens
+
+
+# ---------------------------------------------------------------------------
+# full forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+class ForwardAux(NamedTuple):
+    moe_aux: jax.Array          # () summed aux loss
+    moe_load: jax.Array         # (E,) summed expert load (or zeros(1))
+    moe_dropped: jax.Array      # () mean dropped fraction
+
+
+def _zero_aux() -> ForwardAux:
+    return ForwardAux(moe_aux=jnp.zeros(()), moe_load=jnp.zeros((1,)),
+                      moe_dropped=jnp.zeros(()))
+
+
+def forward(params, cfg: ArchConfig, batch: Dict, *, impl: str = "xla",
+            remat: bool = False,
+            remat_policy: str = "none") -> Tuple[jax.Array, ForwardAux]:
+    """Full-sequence forward → (hidden states (B, L, D), aux).
+
+    ``remat_policy``: "none" saves nothing (recompute-everything, min
+    memory); "dots" saves matmul outputs (§Perf: trades temp memory for
+    less recompute traffic)."""
+    x, positions, _ = _backbone_inputs(params, cfg, batch)
+    fam = cfg.family
+    window = cfg.sliding_window
+    aux = _zero_aux()
+
+    def maybe_ckpt(f):
+        if not remat:
+            return f
+        if remat_policy == "dots":
+            return jax.checkpoint(
+                f, policy=jax.checkpoint_policies
+                .dots_with_no_batch_dims_saveable)
+        return jax.checkpoint(f)
+
+    if fam in ("dense", "vlm", "audio"):
+        def body(h, lp):
+            return _dense_block(lp, cfg, h, positions, window=window,
+                                impl=impl), None
+        x, _ = jax.lax.scan(maybe_ckpt(body), x, params["layers"])
+
+    elif fam == "moe":
+        if cfg.first_k_dense:
+            def dbody(h, lp):
+                return _dense_block(lp, cfg, h, positions, impl=impl), None
+            x, _ = jax.lax.scan(maybe_ckpt(dbody), x, params["dense_layers"])
+
+        def mbody(h, lp):
+            h, stats = _moe_block(lp, cfg, h, positions, impl=impl)
+            return h, stats
+        x, stats = jax.lax.scan(maybe_ckpt(mbody), x, params["layers"])
+        aux = ForwardAux(moe_aux=stats.aux_loss.sum(),
+                         moe_load=stats.load.sum(0),
+                         moe_dropped=stats.dropped.mean())
+
+    elif fam == "ssm":
+        def sbody(h, lp):
+            h, _ = _ssm_block(lp, cfg, h)
+            return h, None
+        x, _ = jax.lax.scan(maybe_ckpt(sbody), x, params["layers"])
+
+    elif fam == "hybrid":
+        n_super = cfg.n_layers // cfg.attn_every
+        stacked = jax.tree.map(
+            lambda a: a.reshape((n_super, cfg.attn_every) + a.shape[1:]),
+            params["layers"])
+        shared = params["shared_attn"]
+
+        def super_body(h, lp):
+            def inner(hh, lpp):
+                hh, _ = _ssm_block(lpp, cfg, hh)
+                return hh, None
+            h, _ = jax.lax.scan(inner, h, lp)
+            h = _dense_block(shared, cfg, h, positions, impl=impl)
+            return h, None
+        x, _ = jax.lax.scan(maybe_ckpt(super_body), x, stacked)
+
+    return rmsnorm(params["final_norm"], x, cfg.norm_eps), aux
+
+
+def loss_fn(params, cfg: ArchConfig, batch: Dict, *, impl: str = "xla",
+            remat: bool = True,
+            remat_policy: str = "none") -> Tuple[jax.Array, Dict]:
+    """Next-token cross-entropy (+ MoE aux + optional MTP)."""
+    x, aux = forward(params, cfg, batch, impl=impl, remat=remat,
+                     remat_policy=remat_policy)
+    logits = lm_logits(params, cfg, x)
+    _, _, labels = _backbone_inputs(params, cfg, batch)
+
+    if cfg.n_codebooks > 1:
+        targets = batch["tokens"][:, :, 1:]        # (B, K, L−1)
+        lg = logits[:, :, :-1]
+        ce = _xent(lg, targets)
+    else:
+        targets = labels[:, 1:]
+        lg = logits[:, :-1]
+        ce = _xent(lg, targets)
+
+    loss = ce
+    metrics = {"ce": ce, "moe_aux": aux.moe_aux,
+               "moe_dropped": aux.moe_dropped, "moe_load": aux.moe_load}
+    if cfg.moe is not None and cfg.moe.router_balance == "aux_loss":
+        loss = loss + cfg.moe.aux_loss_weight * aux.moe_aux
+
+    if cfg.mtp_depth and "mtp" in params:
+        # DeepSeek MTP: predict t+2 from [norm(h_t); norm(emb(tok_{t+1}))]
+        mp = params["mtp"]
+        tok = batch["tokens"]
+        h_in = rmsnorm(mp["norm_h"], x[:, :-1], cfg.norm_eps)
+        e_in = rmsnorm(mp["norm_e"],
+                       embed_tokens(params, cfg, tok[:, 1:]), cfg.norm_eps)
+        h = jnp.concatenate([h_in, e_in], axis=-1) @ mp["proj"]
+        b, lm1, _ = h.shape
+        pos = jnp.broadcast_to(jnp.arange(lm1)[None], (b, lm1))
+        if cfg.mla is not None:
+            h = _dense_block(mp["block"], cfg, h, pos, impl=impl)
+        else:
+            h = _dense_block(mp["block"], cfg, h, pos, impl=impl)
+        mtp_logits = lm_logits(params, cfg, h)     # (B, L−1, V)
+        mtp_ce = _xent(mtp_logits[:, :-1], tok[:, 2:])
+        loss = loss + 0.3 * mtp_ce
+        metrics["mtp_ce"] = mtp_ce
+
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def _xent(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Mean CE over non-ignored (label ≥ 0) positions.
+
+    Gather-free formulation: the label logit is extracted with an
+    iota-compare reduction instead of ``take_along_axis``, so a
+    vocab-sharded logits tensor reduces with a partial-sum + all-reduce
+    rather than a cross-shard gather (SPMD-friendly; see DESIGN.md §7)."""
+    valid = targets >= 0
+    tsafe = jnp.maximum(targets, 0)
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    v = lg.shape[-1]
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, lg.shape, lg.ndim - 1)
+              == tsafe[..., None])
+    label_logit = jnp.sum(jnp.where(onehot, lg, 0.0), axis=-1)
+    nll = lse - label_logit
+    nll = jnp.where(valid, nll, 0.0)
+    return nll.sum() / jnp.maximum(valid.sum(), 1)
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+
+class Caches(NamedTuple):
+    """Stacked per-layer caches (fields unused by a family are None)."""
+    kv: Optional[Any] = None            # stacked A.KVCache (dense/moe)
+    mla: Optional[Any] = None           # stacked A.MLACache
+    ssm: Optional[Any] = None           # stacked SSM.SSMCache
+    shared_kv: Optional[Any] = None     # stacked per-application KVCache
+
+
+def init_caches(cfg: ArchConfig, batch: int, cache_len: int, dtype,
+                ring: bool = False) -> Caches:
+    fam = cfg.family
+
+    def stack(make, n):
+        return jax.tree.map(lambda *xs: jnp.stack(xs),
+                            *[make() for _ in range(n)])
+
+    if fam in ("dense", "vlm", "audio"):
+        return Caches(kv=stack(
+            lambda: A.init_kv_cache(cfg, batch, cache_len, dtype),
+            cfg.n_layers))
+    if fam == "moe":
+        if cfg.mla is not None:
+            mk = lambda: A.init_mla_cache(cfg, batch, cache_len, dtype)
+            dense_kv = (stack(lambda: A.init_mla_cache(cfg, batch, cache_len,
+                                                       dtype),
+                              cfg.first_k_dense)
+                        if cfg.first_k_dense else None)
+            return Caches(mla=stack(mk, cfg.n_layers - cfg.first_k_dense),
+                          shared_kv=dense_kv)
+        return Caches(kv=stack(
+            lambda: A.init_kv_cache(cfg, batch, cache_len, dtype),
+            cfg.n_layers))
+    if fam == "ssm":
+        return Caches(ssm=stack(lambda: SSM.init_ssm_cache(cfg, batch, dtype),
+                                cfg.n_layers))
+    if fam == "hybrid":
+        n_super = cfg.n_layers // cfg.attn_every
+        return Caches(
+            ssm=stack(lambda: SSM.init_ssm_cache(cfg, batch, dtype),
+                      cfg.n_layers),
+            shared_kv=stack(
+                lambda: A.init_kv_cache(cfg, batch, cache_len, dtype),
+                n_super))
+    raise ValueError(fam)
+
+
+def _attn_decode(p, cfg, x, cache, *, ring, window, impl):
+    if cfg.mla is not None:
+        return A.mla_decode(p, cfg, x, cache, ring=ring)
+    return A.gqa_decode(p, cfg, x, cache, ring=ring, window=window, impl=impl)
+
+
+def decode_step(params, cfg: ArchConfig, tokens: jax.Array, caches: Caches,
+                *, ring: bool = False, impl: str = "xla"
+                ) -> Tuple[jax.Array, Caches]:
+    """One-token decode.  tokens: (B, 1) (audio: (B, K, 1)).
+
+    ``ring=True`` → dense KV caches are sliding-window ring buffers
+    (long_500k).  Returns (logits (B, 1, V) or (B, K, 1, V), new caches).
+    """
+    x = embed_tokens(params, cfg, tokens)
+    fam = cfg.family
+    window = cfg.long_context_window if ring else 0
+
+    if fam in ("dense", "vlm", "audio"):
+        def body(h, lp_cache):
+            lp, cache = lp_cache
+            hh = rmsnorm(lp["ln1"], h, cfg.norm_eps)
+            hh, cache = _attn_decode(lp["attn"], cfg, hh, cache, ring=ring,
+                                     window=window, impl=impl)
+            h = h + hh
+            hh = rmsnorm(lp["ln2"], h, cfg.norm_eps)
+            h = h + mlp(lp["mlp"], hh, cfg.activation)
+            return h, cache
+        x, kv = jax.lax.scan(body, x, (params["layers"], caches.kv))
+        caches = caches._replace(kv=kv)
+
+    elif fam == "moe":
+        if cfg.first_k_dense:
+            def dbody(h, lp_cache):
+                lp, cache = lp_cache
+                hh = rmsnorm(lp["ln1"], h, cfg.norm_eps)
+                hh, cache = _attn_decode(lp["attn"], cfg, hh, cache,
+                                         ring=ring, window=window, impl=impl)
+                h = h + hh
+                hh = rmsnorm(lp["ln2"], h, cfg.norm_eps)
+                h = h + mlp(lp["mlp"], hh, cfg.activation)
+                return h, cache
+            x, dkv = jax.lax.scan(dbody, x,
+                                  (params["dense_layers"], caches.shared_kv))
+            caches = caches._replace(shared_kv=dkv)
+
+        def mbody(h, lp_cache):
+            lp, cache = lp_cache
+            hh = rmsnorm(lp["ln1"], h, cfg.norm_eps)
+            hh, cache = _attn_decode(lp["attn"], cfg, hh, cache, ring=ring,
+                                     window=window, impl=impl)
+            h = h + hh
+            hh = rmsnorm(lp["ln2"], h, cfg.norm_eps)
+            y, _ = MOE.moe_forward(lp["moe"], cfg, hh)
+            return h + y, cache
+        cache_field = "mla" if cfg.mla is not None else "kv"
+        x, mkv = jax.lax.scan(mbody, x,
+                              (params["layers"], getattr(caches, cache_field)))
+        caches = caches._replace(**{cache_field: mkv})
+
+    elif fam == "ssm":
+        def sbody(h, lp_cache):
+            lp, cache = lp_cache
+            hh = rmsnorm(lp["ln1"], h, cfg.norm_eps)
+            y, cache = SSM.ssm_decode(lp["ssm"], cfg, hh, cache)
+            return h + y, cache
+        x, sc = jax.lax.scan(sbody, x, (params["layers"], caches.ssm))
+        caches = caches._replace(ssm=sc)
+
+    elif fam == "hybrid":
+        n_super = cfg.n_layers // cfg.attn_every
+        stacked = jax.tree.map(
+            lambda a: a.reshape((n_super, cfg.attn_every) + a.shape[1:]),
+            params["layers"])
+        ssm_c = jax.tree.map(
+            lambda a: a.reshape((n_super, cfg.attn_every) + a.shape[1:])
+            if a.ndim >= 1 else a, caches.ssm)
+        shared = params["shared_attn"]
+
+        def super_body(h, inp):
+            lp, sc, akv = inp
+
+            def inner(hh, lpc):
+                lpp, cc = lpc
+                hhh = rmsnorm(lpp["ln1"], hh, cfg.norm_eps)
+                y, cc = SSM.ssm_decode(lpp["ssm"], cfg, hhh, cc)
+                return hh + y, cc
+            h, sc = jax.lax.scan(inner, h, (lp, sc))
+            hh = rmsnorm(shared["ln1"], h, cfg.norm_eps)
+            hh, akv = _attn_decode(shared["attn"], cfg, hh, akv, ring=ring,
+                                   window=window, impl=impl)
+            h = h + hh
+            hh = rmsnorm(shared["ln2"], h, cfg.norm_eps)
+            h = h + mlp(shared["mlp"], hh, cfg.activation)
+            return h, (sc, akv)
+        x, (sc, akv) = jax.lax.scan(super_body, x,
+                                    (stacked, ssm_c, caches.shared_kv))
+        sc = jax.tree.map(
+            lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), sc)
+        caches = caches._replace(ssm=sc, shared_kv=akv)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return lm_logits(params, cfg, x), caches
+
+
+def prefill(params, cfg: ArchConfig, batch: Dict, *, impl: str = "xla"
+            ) -> Tuple[jax.Array, Caches]:
+    """Process the prompt, build caches, return last-position logits.
+
+    Implemented as full forward + cache construction from the projected
+    K/V (dense) or latents (MLA) / final states (SSM)."""
+    x, positions, _ = _backbone_inputs(params, cfg, batch)
+    b, l, _ = x.shape
+    fam = cfg.family
+    dtype = x.dtype
+
+    if fam in ("dense", "vlm", "audio") or (fam == "moe"):
+        # run layer-by-layer, capturing per-layer K/V for the cache
+        caches = init_caches(cfg, b, l, dtype)
+
+        def capture_kv(lp, h):
+            q, k, v = A._project_qkv(lp["attn"], cfg, h, positions)
+            return k, v
+
+        if fam == "moe" and cfg.first_k_dense:
+            def dbody(h, lp):
+                h = _constrain_residual(h)
+                hh = rmsnorm(lp["ln1"], h, cfg.norm_eps)
+                if cfg.mla is not None:
+                    k_cap = _mla_capture(lp["attn"], cfg, hh, positions)
+                    hh2 = A.mla_forward(lp["attn"], cfg, hh, positions,
+                                        impl=impl)
+                else:
+                    k_cap = capture_kv(lp, hh)
+                    hh2 = A.gqa_forward(lp["attn"], cfg, hh, positions,
+                                        impl=impl)
+                h = h + hh2
+                hh = rmsnorm(lp["ln2"], h, cfg.norm_eps)
+                h = h + mlp(lp["mlp"], hh, cfg.activation)
+                return h, k_cap
+            x, dcap = jax.lax.scan(dbody, x, params["dense_layers"])
+            caches = caches._replace(
+                shared_kv=_caps_to_cache(cfg, dcap, l, dtype))
+
+        if fam == "moe":
+            def mbody(h, lp):
+                h = _constrain_residual(h)
+                hh = rmsnorm(lp["ln1"], h, cfg.norm_eps)
+                if cfg.mla is not None:
+                    k_cap = _mla_capture(lp["attn"], cfg, hh, positions)
+                    hh2 = A.mla_forward(lp["attn"], cfg, hh, positions,
+                                        impl=impl)
+                else:
+                    k_cap = capture_kv(lp, hh)
+                    hh2 = A.gqa_forward(lp["attn"], cfg, hh, positions,
+                                        impl=impl)
+                h = h + hh2
+                hh = rmsnorm(lp["ln2"], h, cfg.norm_eps)
+                y, _ = MOE.moe_forward(lp["moe"], cfg, hh)
+                return h + y, k_cap
+            x, caps = jax.lax.scan(mbody, x, params["layers"])
+            field = "mla" if cfg.mla is not None else "kv"
+            caches = caches._replace(
+                **{field: _caps_to_cache(cfg, caps, l, dtype)})
+        else:
+            def body(h, lp):
+                h = _constrain_residual(h)
+                hh = rmsnorm(lp["ln1"], h, cfg.norm_eps)
+                k_cap = capture_kv(lp, hh)
+                hh2 = A.gqa_forward(lp["attn"], cfg, hh, positions,
+                                    window=cfg.sliding_window, impl=impl)
+                h = h + hh2
+                hh = rmsnorm(lp["ln2"], h, cfg.norm_eps)
+                h = h + mlp(lp["mlp"], hh, cfg.activation)
+                return h, k_cap
+            x, caps = jax.lax.scan(body, x, params["layers"])
+            caches = caches._replace(
+                kv=_caps_to_cache(cfg, caps, l, dtype))
+
+    elif fam == "ssm":
+        caches = init_caches(cfg, b, l, dtype)
+
+        def sbody(h, lp):
+            h = _constrain_residual(h)
+            hh = rmsnorm(lp["ln1"], h, cfg.norm_eps)
+            y, hT = SSM.ssm_forward(lp["ssm"], cfg, hh)
+            # conv tail: last (W−1) conv inputs
+            tail = _conv_tail(lp["ssm"], cfg, hh)
+            return h + y, (hT, tail)
+        x, (hTs, tails) = jax.lax.scan(sbody, x, params["layers"])
+        caches = caches._replace(ssm=SSM.SSMCache(
+            ssm_state=hTs, conv_state=tails,
+            pos=jnp.full((cfg.n_layers, b), l, jnp.int32)))
+
+    elif fam == "hybrid":
+        n_super = cfg.n_layers // cfg.attn_every
+        stacked = jax.tree.map(
+            lambda a: a.reshape((n_super, cfg.attn_every) + a.shape[1:]),
+            params["layers"])
+        shared = params["shared_attn"]
+        caches = init_caches(cfg, b, l, dtype)
+
+        def super_body(h, lp):
+            h = _constrain_residual(h)
+            def inner(hh, lpp):
+                hh = _constrain_residual(hh)
+                hhh = rmsnorm(lpp["ln1"], hh, cfg.norm_eps)
+                y, hT = SSM.ssm_forward(lpp["ssm"], cfg, hhh)
+                tail = _conv_tail(lpp["ssm"], cfg, hhh)
+                return hh + y, (hT, tail)
+            h, caps_inner = jax.lax.scan(inner, h, lp)
+            hh = rmsnorm(shared["ln1"], h, cfg.norm_eps)
+            q, k, v = A._project_qkv(shared["attn"], cfg, hh, positions)
+            hh2 = A.gqa_forward(shared["attn"], cfg, hh, positions, impl=impl)
+            h = h + hh2
+            hh = rmsnorm(shared["ln2"], h, cfg.norm_eps)
+            h = h + mlp(shared["mlp"], hh, cfg.activation)
+            return h, (caps_inner, (k, v))
+        x, (scaps, akv) = jax.lax.scan(super_body, x, stacked)
+        hTs, tails = scaps
+        flat = lambda a: a.reshape((cfg.n_layers,) + a.shape[2:])
+        caches = caches._replace(
+            ssm=SSM.SSMCache(ssm_state=flat(hTs), conv_state=flat(tails),
+                             pos=jnp.full((cfg.n_layers, b), l, jnp.int32)),
+            shared_kv=A.KVCache(k=akv[0], v=akv[1],
+                                pos=jnp.full((n_super, b), l, jnp.int32)))
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.n_codebooks > 1:
+        logits = lm_logits(params, cfg, x[:, -1:, :])
+    else:
+        logits = lm_logits(params, cfg, x[:, -1:, :])
+    return logits, caches
+
+
+def _caps_to_cache(cfg: ArchConfig, caps, l: int, dtype):
+    lead = jax.tree.leaves(caps)[0]
+    n, b = lead.shape[0], lead.shape[1]
+    if cfg.mla is not None:
+        c_kv, k_rope = caps
+        return A.MLACache(c_kv=c_kv.astype(dtype), k_rope=k_rope.astype(dtype),
+                          pos=jnp.full((n, b), l, jnp.int32))
+    k, v = caps
+    return A.KVCache(k=k.astype(dtype), v=v.astype(dtype),
+                     pos=jnp.full((n, b), l, jnp.int32))
+
+
+def _mla_capture(p, cfg, h, positions):
+    _, _, c_kv, k_rope = A._mla_qc(p, cfg, h, positions)
+    return c_kv, k_rope
+
+
+def _conv_tail(p, cfg: ArchConfig, x_in):
+    """Last (conv_dim−1) pre-conv channel rows — the decode conv state."""
+    s = cfg.ssm
+    d_in, _, _ = SSM.ssm_dims(cfg)
+    zxbcdt = x_in @ p["in_proj"]
+    _, xr, Bf, Cf, _ = SSM._split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xr, Bf, Cf], axis=-1)
+    return conv_in[:, -(s.conv_dim - 1):, :]

@@ -1,0 +1,7 @@
+"""Optimizer substrate (no external deps): AdamW + schedules + clipping."""
+from repro.optim.adamw import (AdamWConfig, AdamWState, adamw_init,
+                               adamw_update, global_norm)
+from repro.optim.schedules import cosine_warmup, linear_warmup
+
+__all__ = ["AdamWConfig", "AdamWState", "adamw_init", "adamw_update",
+           "cosine_warmup", "global_norm", "linear_warmup"]

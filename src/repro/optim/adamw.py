@@ -1,0 +1,82 @@
+"""AdamW with decoupled weight decay and global-norm clipping.
+
+Pytree-shaped like the params; moments in f32 regardless of param dtype
+(mixed-precision convention: bf16 params would lose the small-update tail).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0          # 0 disables
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array                 # () i32
+    mu: Any                         # f32 pytree like params
+    nu: Any                         # f32 pytree like params
+
+
+def adamw_init(params: Any) -> AdamWState:
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def _decay_mask(path: tuple) -> bool:
+    """No decay on norms scales / biases / 1-D params (standard)."""
+    name = "/".join(str(getattr(p, "key", p)) for p in path)
+    return not any(s in name for s in ("scale", "norm", "bias", "A_log",
+                                       "D", "dt_bias"))
+
+
+def adamw_update(grads: Any, state: AdamWState, params: Any,
+                 cfg: AdamWConfig, lr_scale: jax.Array | float = 1.0):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    if cfg.clip_norm > 0:
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+    lr = cfg.lr * lr_scale
+
+    def upd(path, g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * g32 * g32
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        if cfg.weight_decay and _decay_mask(path):
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * upd
+        return newp.astype(p.dtype), m, v
+
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree.structure(params)
+    g_leaves = jax.tree.leaves(grads)
+    m_leaves = jax.tree.leaves(state.mu)
+    v_leaves = jax.tree.leaves(state.nu)
+    outs = [upd(path, g, m, v, p)
+            for (path, p), g, m, v in zip(flat, g_leaves, m_leaves, v_leaves)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in outs])
+    return (new_p, AdamWState(step=step, mu=new_m, nu=new_v),
+            {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)})

@@ -1,0 +1,17 @@
+"""LR schedules as pure functions of the step (jit-safe scalars)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup: int):
+    s = jnp.asarray(step, jnp.float32)
+    return jnp.minimum(1.0, (s + 1) / max(warmup, 1))
+
+
+def cosine_warmup(step, warmup: int, total: int, min_frac: float = 0.1):
+    s = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(1.0, (s + 1) / max(warmup, 1))
+    prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return warm * cos

@@ -1,0 +1,8 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+from repro.roofline.hlo_analysis import (HLOReport, analyze_hlo,
+                                         collective_bytes)
+from repro.roofline.model import (HW, RooflineReport, model_flops,
+                                  roofline_report)
+
+__all__ = ["HLOReport", "HW", "RooflineReport", "analyze_hlo",
+           "collective_bytes", "model_flops", "roofline_report"]

@@ -1,0 +1,89 @@
+"""Three-term roofline model (TPU v5e constants) + analytic MODEL_FLOPS.
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs          [s]
+    memory     = HBM_bytes_per_device / HBM_bw              [s]
+    collective = collective_bytes_per_device / link_bw      [s]
+
+Post-SPMD HLO shapes are per-device shards, so the per-device totals from
+:mod:`repro.roofline.hlo_analysis` already include the 1/chips factor of
+the brief's formulas.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.roofline.hlo_analysis import HLOReport
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    """TPU v5e."""
+    peak_flops: float = 197e12          # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9               # B/s per chip
+    ici_bw: float = 50e9                # B/s per link
+    hbm_bytes: float = 16e9             # HBM capacity per chip
+
+
+V5E = HW()
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """Analytic useful FLOPs per step: 6·N·D (train) / 2·N·D (inference),
+    with N = active params (MoE: routed-active only)."""
+    n = cfg.active_param_count()
+    if shape.mode == "train":
+        tokens = shape.tokens
+        return 6.0 * n * tokens
+    if shape.mode == "prefill":
+        return 2.0 * n * shape.tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float
+    hlo_flops_per_device: float
+    useful_ratio: float                 # MODEL_FLOPS / (HLO_FLOPs × chips)
+    collective_by_op: Dict[str, float]
+    bytes_per_device: Optional[float] = None   # from memory_analysis
+    raw_cost_flops: Optional[float] = None     # uncorrected cost_analysis
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def terms(self):
+        return {"compute": self.compute_s, "memory": self.memory_s,
+                "collective": self.collective_s}
+
+
+def roofline_report(arch: str, shape_cfg: ShapeConfig, mesh_name: str,
+                    chips: int, hlo: HLOReport, cfg: ArchConfig, *,
+                    hw: HW = V5E, bytes_per_device: float | None = None,
+                    raw_cost_flops: float | None = None) -> RooflineReport:
+    compute = hlo.dot_flops / hw.peak_flops
+    memory = hlo.hbm_bytes / hw.hbm_bw
+    collective = hlo.collective_bytes / hw.ici_bw
+    terms = {"compute": compute, "memory": memory, "collective": collective}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape_cfg)
+    total_hlo = hlo.dot_flops * chips
+    return RooflineReport(
+        arch=arch, shape=shape_cfg.name, mesh=mesh_name, chips=chips,
+        compute_s=compute, memory_s=memory, collective_s=collective,
+        bottleneck=bottleneck, model_flops=mf,
+        hlo_flops_per_device=hlo.dot_flops,
+        useful_ratio=mf / total_hlo if total_hlo else 0.0,
+        collective_by_op=dict(hlo.collective_by_op),
+        bytes_per_device=bytes_per_device,
+        raw_cost_flops=raw_cost_flops)

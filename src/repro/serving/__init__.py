@@ -1,0 +1,6 @@
+"""Serving substrate: continuous-batching engine + SAP-balanced dispatch."""
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.scheduler import dispatch_requests, simulate_makespan
+
+__all__ = ["Request", "ServingEngine", "dispatch_requests",
+           "simulate_makespan"]

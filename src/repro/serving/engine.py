@@ -1,0 +1,144 @@
+"""Slot-based continuous-batching serving engine.
+
+One replica holds ``max_batch`` decode slots over pre-allocated caches.
+Requests are prefilled individually (batch-1 ``prefill``), their caches
+scattered into a free slot, and all active slots advance together through
+the jitted one-token ``decode_step`` — per-sequence cache positions (the
+``pos: (B,)`` cache contract) are what make mixed-depth slots correct.
+
+Greedy decoding; synthetic workloads have no EOS so requests finish at
+``max_new_tokens`` (an ``eos_id`` is honored when provided).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import decode_step, init_caches, prefill
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray              # (Lp,) int32 — or (K, Lp) audio
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+
+    @property
+    def work_estimate(self) -> float:
+        """Scheduler workload proxy: prompt cost + decode cost."""
+        lp = self.prompt.shape[-1]
+        return lp + self.max_new_tokens
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Optional[Request] = None
+    generated: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def active(self) -> bool:
+        return self.req is not None
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, params, *, max_batch: int,
+                 cache_len: int, impl: str = "xla"):
+        if cfg.family == "vlm":
+            raise NotImplementedError(
+                "VLM serving needs patch inputs per request; use the text "
+                "families for the serving example")
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.cache_len = cache_len
+        self.caches = init_caches(cfg, max_batch, cache_len, jnp.float32)
+        self.slots = [_Slot() for _ in range(max_batch)]
+        self._decode = jax.jit(
+            lambda p, t, c: decode_step(p, cfg, t, c, impl=impl))
+        self._prefill = jax.jit(
+            lambda p, b: prefill(p, cfg, b, impl=impl))
+        self.completed: Dict[int, np.ndarray] = {}
+        self.steps = 0
+
+    # ------------------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if not s.active]
+
+    def add_request(self, req: Request) -> int:
+        free = self.free_slots()
+        if not free:
+            raise RuntimeError("no free slots")
+        slot = free[0]
+        lp = req.prompt.shape[-1]
+        if lp + req.max_new_tokens > self.cache_len:
+            raise ValueError("request exceeds cache length")
+        toks = jnp.asarray(req.prompt, jnp.int32)[None]   # (1, Lp)/(1,K,Lp)
+        logits, req_caches = self._prefill(self.params, {"tokens": toks})
+        self._insert(slot, req_caches, lp)
+        self.slots[slot].req = req
+        first = self._sample(logits)                      # (1, 1)/(1,K,1)
+        self.slots[slot].generated = [np.asarray(first)[0]]
+        return slot
+
+    def _sample(self, logits):
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def _insert(self, slot: int, req_caches, lp: int):
+        """Scatter a batch-1 prefill cache into engine slot ``slot``."""
+        def write(engine_leaf, req_leaf):
+            if engine_leaf.ndim >= 3 and \
+                    engine_leaf.shape[2] != req_leaf.shape[2]:
+                # sequence-bearing leaf: (Lyr, B, S, ...) ← (Lyr, 1, Lp, ...)
+                return engine_leaf.at[:, slot, :req_leaf.shape[2]].set(
+                    req_leaf[:, 0].astype(engine_leaf.dtype))
+            return engine_leaf.at[:, slot].set(
+                req_leaf[:, 0].astype(engine_leaf.dtype))
+
+        self.caches = jax.tree.map(write, self.caches, req_caches)
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """Advance every active slot one token; returns #active."""
+        active = [i for i, s in enumerate(self.slots) if s.active]
+        if not active:
+            return 0
+        if self.cfg.n_codebooks > 1:
+            tok = np.zeros((self.max_batch, self.cfg.n_codebooks, 1),
+                           np.int32)
+            for i in active:
+                tok[i, :, 0] = self.slots[i].generated[-1][..., 0]
+        else:
+            tok = np.zeros((self.max_batch, 1), np.int32)
+            for i in active:
+                tok[i, 0] = self.slots[i].generated[-1][..., 0]
+        logits, self.caches = self._decode(self.params, jnp.asarray(tok),
+                                           self.caches)
+        nxt = np.asarray(self._sample(logits))            # (B,1)/(B,K,1)
+        self.steps += 1
+        for i in active:
+            s = self.slots[i]
+            s.generated.append(nxt[i])
+            done = len(s.generated) >= s.req.max_new_tokens
+            if s.req.eos_id is not None:
+                done |= int(np.ravel(nxt[i])[0]) == s.req.eos_id
+            if done:
+                self.completed[s.req.uid] = np.concatenate(
+                    [np.atleast_1d(np.ravel(g)[..., :1]) for g in s.generated])
+                self.slots[i] = _Slot()
+        return len(active)
+
+    # ------------------------------------------------------------------
+    def run(self, requests: List[Request]) -> Dict[int, np.ndarray]:
+        """Continuous batching: admit whenever a slot frees up."""
+        queue = list(requests)
+        while queue or any(s.active for s in self.slots):
+            while queue and self.free_slots():
+                self.add_request(queue.pop(0))
+            self.step()
+        return self.completed

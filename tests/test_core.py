@@ -1,0 +1,279 @@
+"""Unit + property tests for repro.core (the SAP/STRADS engine)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    SAPConfig, bias_balance_update, candidate_gram, greedy_conflict_free,
+    imbalance, importance_probs, init_balance, init_importance, init_monitor,
+    lpt_assign, makespan, monitor_step, sample_candidates, select_block,
+    strads_init, strads_report, strads_select, uniform_assign,
+    update_importance,
+)
+from repro.core.scheduler import global_to_local, local_to_global
+
+
+# ---------------------------------------------------------------------------
+# importance (SAP step 1)
+# ---------------------------------------------------------------------------
+
+class TestImportance:
+    def test_candidates_distinct(self):
+        imp = init_importance(50)
+        idx = sample_candidates(jax.random.PRNGKey(0), imp, 20)
+        assert len(np.unique(np.asarray(idx))) == 20
+
+    def test_sampling_follows_weights(self):
+        """High-weight variables must be drawn (much) more often."""
+        imp = init_importance(100, eta=1e-6)
+        # all visited once: weight = |delta| + eta
+        deltas = jnp.concatenate([jnp.full((10,), 10.0), jnp.full((90,), 1e-4)])
+        imp = update_importance(imp, jnp.arange(100), deltas)
+        counts = np.zeros(100)
+        for s in range(200):
+            idx = sample_candidates(jax.random.PRNGKey(s), imp, 5)
+            counts[np.asarray(idx)] += 1
+        assert counts[:10].sum() > 0.95 * counts.sum()
+
+    def test_update_respects_mask(self):
+        imp = init_importance(10)
+        idx = jnp.array([0, 1, 2])
+        mask = jnp.array([True, False, True])
+        imp2 = update_importance(imp, idx, jnp.array([1.0, 2.0, 3.0]), mask)
+        w = np.asarray(imp2.weights)
+        assert w[0] == pytest.approx(1.0 + 1e-6)
+        assert w[1] == pytest.approx(float(imp.weights[1]))  # untouched
+        assert w[2] == pytest.approx(3.0 + 1e-6)
+        assert int(imp2.visits[1]) == 0
+
+    def test_probs_normalized_power2(self):
+        imp = init_importance(20, power=2.0)
+        imp = update_importance(imp, jnp.arange(20),
+                                jnp.linspace(0.1, 2.0, 20))
+        p = np.asarray(importance_probs(imp))
+        assert p.sum() == pytest.approx(1.0, rel=1e-5)
+        # power=2 squares the ratio: p ∝ (δ+η)²
+        assert p[-1] / p[0] == pytest.approx((2.0 / 0.1) ** 2, rel=1e-2)
+
+    @given(st.integers(1, 30), st.integers(31, 200), st.integers(0, 2**31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_gumbel_topk_shape_and_range(self, n_cand, n_vars, seed):
+        imp = init_importance(n_vars)
+        idx = np.asarray(sample_candidates(jax.random.PRNGKey(seed), imp,
+                                           n_cand))
+        assert idx.shape == (n_cand,)
+        assert (0 <= idx).all() and (idx < n_vars).all()
+        assert len(np.unique(idx)) == n_cand
+
+
+# ---------------------------------------------------------------------------
+# dependency (SAP step 2)
+# ---------------------------------------------------------------------------
+
+class TestDependency:
+    def _coupled(self, pairs, n):
+        C = np.zeros((n, n), np.float32)
+        np.fill_diagonal(C, 1.0)
+        for i, j, v in pairs:
+            C[i, j] = C[j, i] = v
+        return jnp.asarray(C)
+
+    def test_conflicting_pair_never_coselected(self):
+        C = self._coupled([(0, 1, 0.9)], 4)
+        sel, n = greedy_conflict_free(C, jnp.array([4.0, 3.0, 2.0, 1.0]),
+                                      rho=0.5, max_select=4)
+        sel = np.asarray(sel)
+        assert not (sel[0] and sel[1])
+        assert sel[0]                      # higher priority wins
+        assert sel[2] and sel[3]
+
+    def test_block_size_cap(self):
+        C = self._coupled([], 8)
+        sel, n = greedy_conflict_free(C, jnp.arange(8.0), rho=0.5,
+                                      max_select=3)
+        assert int(n) == 3
+        assert np.asarray(sel).sum() == 3
+        # the 3 highest-priority candidates
+        assert np.asarray(sel)[[7, 6, 5]].all()
+
+    def test_select_block_padding(self):
+        C = self._coupled([(0, 1, 0.9), (0, 2, 0.9), (0, 3, 0.9)], 4)
+        cand = jnp.array([10, 20, 30, 40])
+        idx, mask = select_block(cand, C, jnp.array([9.0, 1.0, 1.0, 1.0]),
+                                 rho=0.5, block_size=3)
+        # only candidate 0 survives; pads point at a valid slot
+        assert int(mask.sum()) == 1
+        assert int(idx[np.asarray(mask).argmax()]) == 10
+        assert np.isin(np.asarray(idx), np.asarray(cand)).all()
+
+    @given(st.integers(0, 2**31 - 1), st.floats(0.05, 0.95),
+           st.integers(2, 16))
+    @settings(max_examples=25, deadline=None)
+    def test_property_pairwise_coupling_below_rho(self, seed, rho, P):
+        """INVARIANT: every co-selected pair has coupling ≤ ρ."""
+        key = jax.random.PRNGKey(seed)
+        X = jax.random.normal(key, (24, 32))
+        X = X / jnp.linalg.norm(X, axis=0)
+        C = candidate_gram(X)
+        prio = jax.random.uniform(jax.random.PRNGKey(seed + 1), (32,))
+        sel, _ = greedy_conflict_free(C, prio, rho, P)
+        sel = np.asarray(sel)
+        Cn = np.asarray(C)
+        picked = np.where(sel)[0]
+        assert 1 <= len(picked) <= P
+        for a in picked:
+            for b in picked:
+                if a != b:
+                    assert Cn[a, b] <= rho + 1e-6
+
+    def test_gram_symmetric_unit_diag(self):
+        X = jax.random.normal(jax.random.PRNGKey(0), (10, 6))
+        X = X / jnp.linalg.norm(X, axis=0)
+        C = np.asarray(candidate_gram(X))
+        np.testing.assert_allclose(C, C.T, atol=1e-6)
+        np.testing.assert_allclose(np.diag(C), 1.0, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# balance (SAP step 3)
+# ---------------------------------------------------------------------------
+
+class TestBalance:
+    def test_lpt_beats_uniform_on_powerlaw(self):
+        w = (1.0 + jnp.arange(64)) ** -1.2 * 1000
+        a_lpt, _ = lpt_assign(w, 8)
+        a_uni = uniform_assign(64, 8)
+        assert float(makespan(w, a_lpt, 8)) < float(makespan(w, a_uni, 8))
+        # LPT bound vs OPT; OPT ≥ max(mean load, heaviest single block)
+        opt_lb = max(float(jnp.sum(w)) / 8, float(jnp.max(w)))
+        assert float(makespan(w, a_lpt, 8)) <= (4 / 3) * opt_lb + 1e-3
+
+    @given(st.integers(0, 2**31 - 1), st.integers(2, 8), st.integers(8, 64))
+    @settings(max_examples=25, deadline=None)
+    def test_property_lpt_makespan_bound(self, seed, bins, m):
+        """LPT guarantee: makespan ≤ (4/3 − 1/(3b))·OPT ≤ 4/3·(mean + max)."""
+        w = jax.random.uniform(jax.random.PRNGKey(seed), (m,)) * 100 + 1
+        a, loads = lpt_assign(w, bins)
+        ms = float(makespan(w, a, bins))
+        lower = max(float(jnp.sum(w)) / bins, float(jnp.max(w)))  # ≤ OPT
+        assert ms <= (4 / 3) * lower + 1e-3
+        # every block assigned exactly once
+        assert np.asarray(a).shape == (m,)
+        assert float(jnp.sum(loads)) == pytest.approx(float(jnp.sum(w)),
+                                                      rel=1e-5)
+
+    def test_bias_balance_pushes_against_load(self):
+        st_b = init_balance(4, rate=0.1, decay=0.0)
+        load = jnp.array([10.0, 1.0, 1.0, 1.0])
+        st_b = bias_balance_update(st_b, load)
+        b = np.asarray(st_b.bias)
+        assert b[0] < 0 and (b[1:] > 0).all()
+
+    def test_bias_balance_converges_uniform(self):
+        """Closed loop: softmax-routing toy where bias must equalize load."""
+        st_b = init_balance(4, rate=0.05, decay=0.5)
+        logits = jnp.array([2.0, 0.5, 0.0, -0.5])     # skewed router
+        for _ in range(300):
+            p = jax.nn.softmax(logits + st_b.bias)
+            st_b = bias_balance_update(st_b, p * 100)
+        p = np.asarray(jax.nn.softmax(logits + st_b.bias))
+        assert p.max() / p.min() < 1.8      # vs 12x unbalanced
+
+
+# ---------------------------------------------------------------------------
+# progress (SAP step 4)
+# ---------------------------------------------------------------------------
+
+class TestProgress:
+    def test_monitor_stops_on_stall(self):
+        mon = init_monitor(tol=1e-3, patience=3)
+        conv = False
+        for obj in [100.0, 50.0, 49.99, 49.99, 49.99, 49.99]:
+            mon, conv = monitor_step(mon, jnp.asarray(obj))
+        assert bool(conv)
+
+    def test_monitor_keeps_going_with_progress(self):
+        mon = init_monitor(tol=1e-3, patience=3)
+        for obj in [100.0, 90.0, 80.0, 70.0, 60.0]:
+            mon, conv = monitor_step(mon, jnp.asarray(obj))
+            assert not bool(conv)
+
+
+# ---------------------------------------------------------------------------
+# STRADS distributed scheduler
+# ---------------------------------------------------------------------------
+
+class TestStrads:
+    CFG = SAPConfig(n_workers=4, n_candidates=8, rho=0.5)
+
+    def test_strided_ownership_roundtrip(self):
+        S = 4
+        for s in range(S):
+            loc = jnp.arange(10)
+            g = local_to_global(s, loc, S)
+            assert (np.asarray(g) % S == s).all()
+            np.testing.assert_array_equal(np.asarray(global_to_local(g, S)),
+                                          np.asarray(loc))
+
+    def test_select_stays_in_shard(self):
+        """INVARIANT: a scheduler shard only ever dispatches its own vars."""
+        st_s = strads_init(64, 4, self.CFG)
+        X = jax.random.normal(jax.random.PRNGKey(0), (16, 64))
+        X = X / jnp.linalg.norm(X, axis=0)
+        for s in range(4):
+            idx, mask = strads_select(
+                jax.random.PRNGKey(s), st_s, jnp.asarray(s), None,
+                lambda a, c: jnp.abs(X[:, c].T @ X[:, c]), self.CFG)
+            assert (np.asarray(idx) % 4 == s).all()
+
+    def test_report_updates_only_owner(self):
+        st_s = strads_init(64, 4, self.CFG)
+        idx = jnp.array([1, 5, 9, 13])          # all shard 1
+        st2 = strads_report(st_s, jnp.asarray(1), idx,
+                            jnp.array([1.0, 2.0, 3.0, 4.0]),
+                            jnp.ones(4, bool))
+        w = np.asarray(st2.weights)
+        w0 = np.asarray(st_s.weights)
+        assert not np.allclose(w[1], w0[1])
+        np.testing.assert_array_equal(w[0], w0[0])
+        np.testing.assert_array_equal(w[2], w0[2])
+
+    def test_round_robin_covers_all_shards(self):
+        from repro.apps import lasso as L
+        prob, _ = L.make_synthetic(jax.random.PRNGKey(0), 32, 64, 8)
+        prob = L.with_lambda(prob, 0.01)
+        res = L.run_lasso(prob, "strads", self.CFG, n_rounds=8, n_shards=4)
+        # 8 rounds, 4 shards -> every shard dispatched twice; all updates
+        # applied means objective strictly decreased
+        assert float(res.objectives[-1]) < float(res.objectives[0])
+
+    def test_bad_configs_raise(self):
+        with pytest.raises(ValueError):
+            SAPConfig(n_workers=8, n_candidates=8, rho=0.5).validate()
+        with pytest.raises(ValueError):
+            SAPConfig(n_workers=2, n_candidates=4, rho=1.5).validate()
+        with pytest.raises(ValueError):
+            strads_init(63, 4, self.CFG)        # not divisible
+        with pytest.raises(ValueError):
+            strads_init(16, 4, self.CFG)        # shard smaller than P'
+
+
+class TestShardMapSelector:
+    def test_sharded_selector_single_device(self):
+        """shard_map path on the 1-device CPU mesh (S=1)."""
+        from repro.core import make_sharded_selector
+        mesh = jax.make_mesh((1,), ("sched",))
+        cfg = SAPConfig(n_workers=4, n_candidates=8, rho=0.5)
+        st_s = strads_init(32, 1, cfg)
+        X = jax.random.normal(jax.random.PRNGKey(0), (16, 32))
+        X = X / jnp.linalg.norm(X, axis=0)
+        sel = make_sharded_selector(mesh, "sched",
+                                    lambda a, c: jnp.abs(X[:, c].T @ X[:, c]),
+                                    cfg)
+        keys = jax.random.split(jax.random.PRNGKey(1), 1)
+        idx, mask = sel(jnp.asarray(0), keys, st_s.weights, st_s.visits,
+                        st_s.eta, st_s.power, jnp.zeros(()))
+        assert idx.shape == (4,)
+        assert bool(mask[0])

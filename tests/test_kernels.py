@@ -1,0 +1,188 @@
+"""Per-kernel validation: Pallas (interpret=True) vs the pure-jnp oracle,
+swept over shapes and dtypes, plus hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=1e-1) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# gram
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(64, 32), (300, 200), (513, 129),
+                                   (1024, 128), (100, 260)])
+def test_gram_matches_ref(shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), shape).astype(dtype)
+    out = ops.gram(x, impl="interpret")
+    exp = ref.gram(x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), **tol(dtype))
+
+
+@pytest.mark.parametrize("absolute", [True, False])
+def test_gram_absolute_flag(absolute):
+    x = jax.random.normal(jax.random.PRNGKey(1), (96, 48))
+    out = np.asarray(ops.gram(x, absolute=absolute, impl="interpret"))
+    exp = np.asarray(ref.gram(x, absolute=absolute))
+    np.testing.assert_allclose(out, exp, rtol=1e-4, atol=1e-4)
+    if absolute:
+        assert (out >= 0).all()
+
+
+@given(st.integers(8, 200), st.integers(4, 100), st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_gram_property_random_shapes(n, p, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, p))
+    out = np.asarray(ops.gram(x, impl="interpret"))
+    exp = np.asarray(ref.gram(x))
+    assert out.shape == (p, p)
+    np.testing.assert_allclose(out, exp, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# cd_update
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+@pytest.mark.parametrize("shape", [(128, 16), (500, 70), (1025, 128),
+                                   (2048, 256), (333, 7)])
+def test_cd_update_matches_ref(shape, dtype):
+    n, b = shape
+    k = jax.random.PRNGKey(0)
+    xb = jax.random.normal(k, (n, b)).astype(dtype)
+    xb = xb / jnp.linalg.norm(xb, axis=0)
+    r = jax.random.normal(jax.random.PRNGKey(1), (n,)).astype(dtype)
+    beta = 0.5 * jax.random.normal(jax.random.PRNGKey(2), (b,)).astype(dtype)
+    mask = jax.random.bernoulli(jax.random.PRNGKey(3), 0.8, (b,))
+    d1, r1 = ops.cd_update(xb, r, beta, 0.1, mask, impl="interpret")
+    d2, r2 = ref.cd_update(xb, r, beta, 0.1, mask)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), **tol(dtype))
+    np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), **tol(dtype))
+
+
+def test_cd_update_no_mask():
+    n, b = 256, 32
+    xb = jax.random.normal(jax.random.PRNGKey(0), (n, b))
+    xb = xb / jnp.linalg.norm(xb, axis=0)
+    r = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    beta = jnp.zeros((b,))
+    d1, r1 = ops.cd_update(xb, r, beta, 0.05, impl="interpret")
+    d2, r2 = ref.cd_update(xb, r, beta, 0.05)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-4,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), rtol=1e-4,
+                               atol=1e-5)
+
+
+@given(st.integers(16, 300), st.integers(2, 64),
+       st.floats(0.0, 1.0), st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_cd_update_property(n, b, lam, seed):
+    """INVARIANT (all impls): residual returned == r − X_B δ, and the
+    objective never increases under a sequential-equivalent single update."""
+    k = jax.random.PRNGKey(seed)
+    xb = jax.random.normal(k, (n, b))
+    xb = xb / jnp.maximum(jnp.linalg.norm(xb, axis=0), 1e-9)
+    r = jax.random.normal(jax.random.fold_in(k, 1), (n,))
+    beta = jax.random.normal(jax.random.fold_in(k, 2), (b,)) * 0.3
+    d, r_out = ops.cd_update(xb, r, beta, lam, impl="interpret")
+    np.testing.assert_allclose(np.asarray(r_out),
+                               np.asarray(r - xb @ d), rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [
+    # (B, Hq, Hkv, Lq, Lk, D)
+    (1, 2, 2, 128, 128, 64),     # MHA, aligned
+    (2, 4, 2, 200, 200, 64),     # GQA, unaligned L
+    (1, 8, 1, 64, 64, 128),      # MQA
+    (1, 4, 4, 1, 333, 64),       # decode: 1 query vs cache
+    (2, 2, 2, 100, 37, 32),      # short keys (prefill chunk)
+])
+def test_attention_matches_ref(shape, dtype):
+    b, hq, hkv, lq, lk, d = shape
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = (jax.random.normal(ks[0], (b, hq, lq, d)) * 0.3).astype(dtype)
+    k = (jax.random.normal(ks[1], (b, hkv, lk, d)) * 0.3).astype(dtype)
+    v = jax.random.normal(ks[2], (b, hkv, lk, d)).astype(dtype)
+    if lq > lk:
+        return  # causal with queries past the cache end is undefined here
+    o1 = ops.flash_attention(q, k, v, causal=True, impl="interpret")
+    o2 = ref.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(o1, np.float32), np.asarray(o2, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("window", [16, 64, 1000])
+def test_attention_sliding_window(window):
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 2, 150, 32)) * 0.3
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 150, 32)) * 0.3
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 2, 150, 32))
+    o1 = ops.flash_attention(q, k, v, causal=True, window=window,
+                             impl="interpret")
+    o2 = ref.flash_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_attention_window_actually_limits():
+    """A key outside the window must have zero influence."""
+    L, D = 64, 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, L, D)) * 0.3
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, L, D)) * 0.3
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 1, L, D))
+    v2 = v.at[:, :, 0, :].add(100.0)       # poison the first value
+    w = 8
+    o1 = ref.flash_attention(q, k, v, causal=True, window=w)
+    o2 = ref.flash_attention(q, k, v2, causal=True, window=w)
+    # queries ≥ w cannot see position 0
+    np.testing.assert_allclose(np.asarray(o1[:, :, w:]),
+                               np.asarray(o2[:, :, w:]), atol=1e-5)
+    assert not np.allclose(np.asarray(o1[:, :, 0]), np.asarray(o2[:, :, 0]))
+
+
+def test_attention_probs_rowsum():
+    """Softmax invariant: with v=1, attention output is exactly 1."""
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 2, 90, 32))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 90, 32))
+    v = jnp.ones((1, 2, 90, 32))
+    o = ops.flash_attention(q, k, v, causal=True, impl="interpret")
+    np.testing.assert_allclose(np.asarray(o), 1.0, rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(1, 2), st.sampled_from([1, 2, 4]), st.integers(1, 3),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_attention_property_gqa_equiv(b, group, hkv, seed):
+    """GQA kernel == MHA kernel on explicitly repeated KV heads."""
+    hq = group * hkv
+    L, D = 96, 32
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, hq, L, D)) * 0.3
+    k = jax.random.normal(ks[1], (b, hkv, L, D)) * 0.3
+    v = jax.random.normal(ks[2], (b, hkv, L, D))
+    o1 = ops.flash_attention(q, k, v, impl="interpret")
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    o2 = ops.flash_attention(q, kr, vr, impl="interpret")
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_ops_rejects_bad_impl():
+    x = jnp.ones((8, 4))
+    with pytest.raises(ValueError):
+        ops.gram(x, impl="cuda")

@@ -1,0 +1,129 @@
+"""Tests for parallel MF with SAP load balancing — paper Sec. 2.2/5.2."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.apps import matrix_factorization as MF
+from repro.core.balance import imbalance, makespan
+
+
+@pytest.fixture(scope="module")
+def uniform_prob():
+    return MF.make_synthetic(jax.random.PRNGKey(0), 200, 150, 6,
+                             density=0.1, powerlaw=0.0)
+
+
+@pytest.fixture(scope="module")
+def powerlaw_prob():
+    return MF.make_synthetic(jax.random.PRNGKey(0), 200, 150, 6,
+                             density=0.1, powerlaw=1.0)
+
+
+class TestCCDCorrectness:
+    def test_epoch_monotone_decrease(self, uniform_prob):
+        """CCD epochs must monotonically decrease the regularized loss."""
+        st_m = MF.init_state(jax.random.PRNGKey(1), uniform_prob, 6)
+        prev = float(MF.objective(uniform_prob, st_m))
+        for _ in range(4):
+            st_m = MF.ccd_epoch(uniform_prob, st_m)
+            cur = float(MF.objective(uniform_prob, st_m))
+            assert cur <= prev + 1e-3
+            prev = cur
+
+    def test_rank_update_optimality(self, uniform_prob):
+        """Each w_t/h_t CCD update is the exact 1-D minimizer: perturbing
+        w_t after the update can only increase the objective."""
+        prob = uniform_prob
+        st_m = MF.init_state(jax.random.PRNGKey(2), prob, 6)
+        st_m = MF.update_rank(prob, st_m, 0)
+        # fresh residual for the h-phase means w_t is optimal given OLD H,
+        # so re-run the w phase alone and test its optimality.
+        W, H = st_m.W, st_m.H
+        base = float(MF.objective(prob, st_m))
+        for eps in (1e-2, -1e-2):
+            W2 = W.at[:, 3].add(eps)     # rank 3 untouched by update 0
+            pass  # (rank-3 perturbation tested below on its own update)
+        st2 = MF.update_rank(prob, st_m, 3)
+        base2 = float(MF.objective(prob, st2))
+        for eps in (1e-2, -1e-2):
+            H2 = st2.H.at[3].add(eps)
+            alt = float(MF.objective(prob, MF.MFState(W=st2.W, H=H2)))
+            assert alt >= base2 - 1e-4
+
+    def test_objective_decreases_to_noise_floor(self, uniform_prob):
+        r = MF.run_mf(uniform_prob, rank=6, n_workers=4, scheme="strads",
+                      n_epochs=10)
+        objs = np.asarray(r.objectives)
+        assert objs[-1] < 0.25 * objs[0]
+        assert np.isfinite(objs).all()
+
+    def test_updates_identical_across_schemes(self, powerlaw_prob):
+        """Partitioning changes wall-clock, NOT the math (paper: the same
+        CCD updates run under any partition)."""
+        r1 = MF.run_mf(powerlaw_prob, 6, 8, "strads", 3)
+        r2 = MF.run_mf(powerlaw_prob, 6, 8, "naive", 3)
+        np.testing.assert_allclose(np.asarray(r1.objectives),
+                                   np.asarray(r2.objectives), rtol=1e-5)
+
+
+class TestLoadBalancing:
+    def test_strads_beats_naive_on_powerlaw(self, powerlaw_prob):
+        """Fig. 5 (Yahoo-Music): big makespan win on power-law data."""
+        r_s = MF.run_mf(powerlaw_prob, 6, 16, "strads", 2)
+        r_n = MF.run_mf(powerlaw_prob, 6, 16, "naive", 2)
+        assert float(r_s.sim_time[-1]) < 0.5 * float(r_n.sim_time[-1])
+        assert r_s.imbalance_rows < 1.1
+        assert r_n.imbalance_rows > 1.5
+
+    def test_gain_grows_with_workers(self, powerlaw_prob):
+        """Fig. 5: the load-balancing gap widens with core count."""
+        gaps = []
+        for P in (4, 16):
+            t_s = float(MF.run_mf(powerlaw_prob, 6, P, "strads", 1)
+                        .sim_time[-1])
+            t_n = float(MF.run_mf(powerlaw_prob, 6, P, "naive", 1)
+                        .sim_time[-1])
+            gaps.append(t_n / t_s)
+        assert gaps[1] > gaps[0]
+
+    def test_small_gain_on_uniform(self, uniform_prob):
+        """Fig. 5 (NetFlix): near-uniform data ⇒ modest benefit."""
+        t_s = float(MF.run_mf(uniform_prob, 6, 8, "strads", 1).sim_time[-1])
+        t_n = float(MF.run_mf(uniform_prob, 6, 8, "naive", 1).sim_time[-1])
+        assert t_s <= t_n            # never worse
+        assert t_n < 1.5 * t_s       # ...but the gap is small
+
+    @given(st.integers(0, 2**31 - 1), st.integers(2, 16),
+           st.floats(0.0, 1.5))
+    @settings(max_examples=10, deadline=None)
+    def test_property_strads_never_slower(self, seed, P, alpha):
+        """INVARIANT: LPT partitioning never yields a worse makespan than
+        the uniform contiguous baseline."""
+        prob = MF.make_synthetic(jax.random.PRNGKey(seed), 64, 48, 4,
+                                 density=0.15, powerlaw=alpha)
+        ra_s, ca_s = MF.partition(prob, P, "strads")
+        ra_n, ca_n = MF.partition(prob, P, "naive")
+        rw = MF.row_workloads(prob)
+        assert float(makespan(rw, ra_s, P)) <= float(makespan(rw, ra_n, P)) + 1e-3
+
+
+class TestData:
+    def test_powerlaw_actually_skews(self):
+        pu = MF.make_synthetic(jax.random.PRNGKey(3), 300, 200, 4,
+                               density=0.08, powerlaw=0.0)
+        pp = MF.make_synthetic(jax.random.PRNGKey(3), 300, 200, 4,
+                               density=0.08, powerlaw=1.2)
+        cv_u = float(jnp.std(MF.col_workloads(pu)) /
+                     jnp.mean(MF.col_workloads(pu)))
+        cv_p = float(jnp.std(MF.col_workloads(pp)) /
+                     jnp.mean(MF.col_workloads(pp)))
+        assert cv_p > 3 * cv_u
+
+    def test_mask_matches_values(self):
+        prob = MF.make_synthetic(jax.random.PRNGKey(4), 50, 40, 4)
+        A = np.asarray(prob.A)
+        m = np.asarray(prob.mask)
+        assert (A[~m] == 0).all()
+        assert np.abs(A[m]).mean() > 0

@@ -1,0 +1,134 @@
+"""Cross-path consistency: decode-with-cache == full forward, chunked ==
+xla attention inside the model, absorbed == naive MLA decode."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.models import (decode_step, forward, init_caches, init_params,
+                          lm_logits, make_batch, prefill)
+
+L = 24
+
+
+def _decode_all(params, cfg, toks, cache_len):
+    caches = init_caches(cfg, toks.shape[0], cache_len, jnp.float32)
+    outs = []
+    step = jax.jit(lambda t, c: decode_step(params, cfg, t, c))
+    for t in range(toks.shape[-1]):
+        tok = toks[:, :, t:t + 1] if toks.ndim == 3 else toks[:, t:t + 1]
+        lg, caches = step(tok, caches)
+        outs.append(lg)
+    return jnp.concatenate(outs, axis=-2), caches
+
+
+def _ample_capacity(cfg):
+    """Capacity is a per-call property: decode sees 2 tokens/call, forward
+    sees 48, so drop patterns differ unless capacity is ample.  Equivalence
+    is only defined in the drop-free regime."""
+    if cfg.moe is None:
+        return cfg
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "gemma-2b", "qwen3-32b",
+                                  "olmoe-1b-7b", "musicgen-medium"])
+def test_decode_matches_forward(arch):
+    cfg = _ample_capacity(get_config(arch).reduced())
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(jax.random.PRNGKey(1), cfg,
+                       ShapeConfig("s", L, 2, "train"))
+    x, _ = forward(params, cfg, batch)
+    full = lm_logits(params, cfg, x)
+    dec, _ = _decode_all(params, cfg, batch["tokens"], L)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_mla_decode_absorbed_matches_naive_and_forward(monkeypatch):
+    from repro.models import attention as A
+    cfg = _ample_capacity(get_config("deepseek-v3-671b").reduced())
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(jax.random.PRNGKey(1), cfg,
+                       ShapeConfig("s", L, 2, "train"))
+    x, _ = forward(params, cfg, batch)
+    full = lm_logits(params, cfg, x)
+    for absorbed in (True, False):
+        monkeypatch.setattr(A, "_ABSORBED_DEFAULT", absorbed)
+        dec, _ = _decode_all(params, cfg, batch["tokens"], L)
+        np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                                   rtol=5e-3, atol=5e-3,
+                                   err_msg=f"absorbed={absorbed}")
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "mistral-large-123b"])
+def test_chunked_attention_model_equivalence(arch):
+    """The §Perf chunked flash path is numerically equal inside the model."""
+    cfg = get_config(arch).reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(jax.random.PRNGKey(1), cfg,
+                       ShapeConfig("s", 48, 2, "train"))
+    x1, _ = forward(params, cfg, batch, impl="xla")
+    x2, _ = forward(params, cfg, batch, impl="chunked")
+    np.testing.assert_allclose(np.asarray(x1), np.asarray(x2),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_chunked_gradients_match_xla_in_model():
+    from repro.models import loss_fn
+    cfg = get_config("llama3.2-3b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(jax.random.PRNGKey(1), cfg,
+                       ShapeConfig("s", 32, 2, "train"))
+    g1 = jax.grad(lambda p: loss_fn(p, cfg, batch, impl="xla",
+                                    remat=False)[0])(params)
+    g2 = jax.grad(lambda p: loss_fn(p, cfg, batch, impl="chunked",
+                                    remat=False)[0])(params)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-3, atol=5e-3)
+
+
+def test_moe_local_dispatch_matches_global():
+    """Shard-local two-stage dispatch == single-shard dispatch when no
+    tokens are dropped (capacity ample)."""
+    from repro.distributed.context import use_mesh
+    from repro.models.moe import moe_forward, moe_init
+    base = get_config("olmoe-1b-7b").reduced()
+    cfg = dataclasses.replace(
+        base, moe=dataclasses.replace(base.moe, capacity_factor=8.0))
+    p = moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model))
+    y1, s1 = moe_forward(p, cfg, x)          # no mesh: 1 shard
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    class FakeMesh:
+        shape = {"data": 4, "model": 1}
+    from repro.distributed import context
+    context._ACTIVE.append(FakeMesh())
+    try:
+        y4, s4 = moe_forward(p, cfg, x)      # 4 logical shards
+    finally:
+        context._ACTIVE.pop()
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y4),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1.load), np.asarray(s4.load))
+
+
+def test_vlm_prefill_and_loss_mask():
+    cfg = get_config("qwen2-vl-2b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(jax.random.PRNGKey(1), cfg,
+                       ShapeConfig("s", 32, 2, "train"))
+    logits, caches = prefill(params, cfg, batch)
+    assert logits.shape[-1] == cfg.padded_vocab
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    # patch positions carry no labels: loss only counts text
+    from repro.models import loss_fn
+    loss, m = loss_fn(params, cfg, batch, remat=False)
+    assert np.isfinite(float(loss))
